@@ -1,0 +1,62 @@
+"""Figure 4: impact of fan-in (slots per leaf).
+
+Fixed directory width, varying number of distinct leaves: the shortcut
+touches a view of ``slots`` pages regardless of fan-in while the
+traditional path touches ``slots`` pointers + ``leaves`` pages — so high
+fan-in favors the traditional path (the TLB-thrashing lesson; in the JAX
+analogue the composed view's footprint is what grows).  Reproduction
+target: a crossover — traditional wins at high fan-in, shortcut at low.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, timeit
+from repro.core import rewiring
+
+
+def run(scale: float = 1.0 / 64):
+    slots_log2 = max(12, int(np.log2(2 ** 22 * scale)))
+    n_slots = 1 << slots_log2
+    n_access = max(10_000, int(10_000_000 * scale))
+    page_slots = 512  # 4KB page of int64 analogue: 512 u64 -> use u32 x512
+    rng = np.random.default_rng(2)
+    rows = []
+    probe_slots = jnp.asarray(
+        rng.integers(0, n_slots, n_access).astype(np.int32))
+
+    for fan_in_log2 in (9, 6, 4, 2, 0):
+        fan_in = 1 << fan_in_log2
+        n_leaves = n_slots >> fan_in_log2
+        pool = jnp.asarray(
+            rng.integers(0, 2**31, (n_leaves, page_slots), np.int64)
+            .astype(np.uint32))
+        # directory: fan_in consecutive slots -> same leaf
+        directory = jnp.asarray(
+            (np.arange(n_slots) >> fan_in_log2).astype(np.int32))
+
+        def traditional(slots):
+            leaf = directory[slots]               # indirection 1
+            return pool[leaf, slots % page_slots]  # indirection 2
+
+        view = rewiring.compose(pool, directory)   # (n_slots, page)
+
+        def shortcut(slots):
+            return view[slots, slots % page_slots]
+
+        t_trad = timeit(traditional, probe_slots) / n_access * 1e9
+        t_short = timeit(shortcut, probe_slots) / n_access * 1e9
+        rows += [
+            Row("fig4", f"traditional_fanin_{fan_in}", t_trad,
+                "ns/access", f"leaves={n_leaves}"),
+            Row("fig4", f"shortcut_fanin_{fan_in}", t_short,
+                "ns/access",
+                f"ratio={t_trad / max(t_short, 1e-9):.2f}x"),
+        ]
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

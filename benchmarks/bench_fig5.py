@@ -1,0 +1,94 @@
+"""Figure 5: maintenance/reader interference (the TLB-shootdown analogue).
+
+Paper setup: a "shooting" thread remaps pages while reader threads scan;
+shootdown cost lands on the shooter, not the readers.  TPU/JAX analogue
+(DESIGN.md §2): view re-materialization competes for HBM bandwidth /
+dispatch with readers.  We run a mapper thread replaying remap batches
+against the composed view while reader threads run batched lookups, and
+report (a) per-remap cost vs reader count, (b) per-read cost with the
+mapper active, (c) per-read cost without it.
+
+Reproduction target: remap cost grows with concurrent readers; reader
+cost stays roughly flat (maintenance hides on the maintenance thread).
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, sync
+from repro.core import rewiring
+
+
+def run(scale: float = 1.0 / 64):
+    n_slots = 1 << max(12, int(np.log2(2 ** 20 * scale)))
+    page = 256
+    n_remaps = max(200, int(2 ** 19 * scale * 0.05))
+    reads_per_wave = 200_000
+    rng = np.random.default_rng(3)
+    pool = jnp.asarray(rng.integers(0, 2**31, (n_slots, page), np.int64)
+                       .astype(np.uint32))
+    view0 = rewiring.compose(
+        pool, jnp.arange(n_slots, dtype=jnp.int32))
+    sync(view0)
+    probe = jnp.asarray(rng.integers(0, n_slots, reads_per_wave)
+                        .astype(np.int32))
+
+    def read_wave(view):
+        return view[probe, probe % page].sum()
+
+    rows = []
+    for n_readers in (0, 1, 2, 4):
+        stop = threading.Event()
+        read_counts = [0] * max(n_readers, 1)
+        read_times = [0.0] * max(n_readers, 1)
+
+        def reader(i):
+            local_view = view0
+            while not stop.is_set():
+                t0 = time.perf_counter()
+                sync(read_wave(local_view))
+                read_times[i] += time.perf_counter() - t0
+                read_counts[i] += 1
+
+        threads = [threading.Thread(target=reader, args=(i,), daemon=True)
+                   for i in range(n_readers)]
+        for t in threads:
+            t.start()
+        # the shooter: replay remap batches
+        view = view0
+        slots = jnp.asarray(rng.integers(0, n_slots, 64).astype(np.int32))
+        offs = jnp.asarray(rng.integers(0, n_slots, 64).astype(np.int32))
+        t0 = time.perf_counter()
+        for _ in range(n_remaps // 64):
+            view = rewiring.remap_slots(view, pool, slots, offs)
+        sync(view)
+        t_remap = (time.perf_counter() - t0) / n_remaps * 1e6
+        stop.set()
+        for t in threads:
+            t.join(timeout=5)
+        rows.append(Row("fig5", f"remap_with_{n_readers}_readers",
+                        t_remap, "us/remap"))
+        if n_readers:
+            per_read = sum(read_times) / max(sum(read_counts), 1) \
+                / reads_per_wave * 1e9
+            rows.append(Row("fig5", f"read_during_remap_{n_readers}",
+                            per_read, "ns/read"))
+
+    # baseline reader cost without a shooter
+    t0 = time.perf_counter()
+    for _ in range(5):
+        sync(read_wave(view0))
+    rows.append(Row("fig5", "read_no_shooter",
+                    (time.perf_counter() - t0) / 5 / reads_per_wave * 1e9,
+                    "ns/read"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

@@ -1,0 +1,85 @@
+"""Figure 8: synchronization under a mixed workload.
+
+Paper: bulk-load 92M, then four waves of 2M accesses (1% inserts then 99%
+lookups), plotting lookup latency + both version numbers — the shortcut
+goes stale during each insert burst, lookups fall back to the traditional
+directory, and the mapper catches up shortly after.
+
+Here the mapper runs as a real async thread; we sample lookup latency and
+versions through the waves.  Reproduction target: lookup time spikes
+during the burst (traditional routing) and drops below the EH baseline
+once versions re-converge."""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, sync, unique_keys
+from repro.core import extendible_hashing as eh
+from repro.core.shortcut_eh import ShortcutEH
+
+
+def run(scale: float = 1.0 / 100):
+    n_bulk = max(20_000, int(92_000_000 * scale * 0.01))
+    wave_inserts = max(400, n_bulk // 50)
+    wave_lookups = 12
+    lookup_batch = max(5_000, n_bulk // 4)
+    rng = np.random.default_rng(5)
+    keys = unique_keys(rng, n_bulk + 4 * wave_inserts)
+    bucket_slots = 512
+    capacity = max(64, int(n_bulk / (bucket_slots * 0.25)) * 8)
+
+    rows = []
+    with ShortcutEH(max_global_depth=16, bucket_slots=bucket_slots,
+                    capacity=capacity, poll_interval=0.002,
+                    async_mapper=True) as sc:
+        sc.insert(keys[:n_bulk], np.arange(n_bulk, dtype=np.uint32))
+        sc.wait_in_sync()
+        # EH baseline for comparison: same state, always traditional
+        probe = jnp.asarray(rng.choice(keys[:n_bulk], lookup_batch))
+        t0 = time.perf_counter()
+        sync(eh.eh_lookup_many(sc.state, probe))
+        t_eh = (time.perf_counter() - t0) / lookup_batch * 1e9
+        rows.append(Row("fig8", "EH_baseline_lookup", t_eh, "ns/lookup"))
+
+        inserted = n_bulk
+        for wave in range(4):
+            burst = keys[inserted:inserted + wave_inserts]
+            sc.insert(burst, np.arange(inserted, inserted + wave_inserts,
+                                       dtype=np.uint32))
+            inserted += wave_inserts
+            stale_seen = not sc.in_sync()
+            # lookups while (possibly) out of sync
+            lat = []
+            routes_sc = 0
+            for i in range(wave_lookups):
+                probe = jnp.asarray(
+                    rng.choice(keys[:inserted], lookup_batch))
+                used_shortcut = sc.use_shortcut()
+                t0 = time.perf_counter()
+                sync(sc.lookup(probe))
+                lat.append((time.perf_counter() - t0)
+                           / lookup_batch * 1e9)
+                routes_sc += int(used_shortcut)
+            tv, sv = sc.versions()
+            rows.append(Row(
+                "fig8", f"wave{wave}_lookup_mean",
+                float(np.mean(lat)), "ns/lookup",
+                f"stale_at_burst={stale_seen} shortcut_routed="
+                f"{routes_sc}/{wave_lookups} versions={tv}/{sv}"))
+            sc.wait_in_sync()
+            probe = jnp.asarray(rng.choice(keys[:inserted], lookup_batch))
+            t0 = time.perf_counter()
+            sync(sc.lookup(probe))
+            rows.append(Row(
+                "fig8", f"wave{wave}_lookup_after_sync",
+                (time.perf_counter() - t0) / lookup_batch * 1e9,
+                "ns/lookup", f"in_sync={sc.in_sync()}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

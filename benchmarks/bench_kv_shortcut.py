@@ -1,0 +1,109 @@
+"""Beyond-paper: the serving-layer shortcut (paged vs contiguous KV view).
+
+Measures one decode step's context access on CPU at reduced scale:
+  paged     — block-table gather (two dependent indirections)
+  shortcut  — contiguous view slice (address arithmetic)
+plus the maintenance cost of keeping the view in sync (the async replay),
+mirroring Table 1's economics at the KV-cache layer.  The TPU-scale
+version of this comparison is the dry-run roofline delta
+(EXPERIMENTS.md §Perf, decode cells).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, sync, timeit
+from repro.kvcache import paged_cache as pc
+from repro.kvcache.shortcut_cache import (ShortcutKVManager, compose_seq,
+                                          slice_context)
+
+
+def run(scale: float = 1.0 / 64):
+    L, KV, hd, bs = 4, 4, 64, 16
+    B = 8
+    S = max(256, int(32768 * scale * 4))
+    S = -(-S // bs) * bs            # block-aligned
+    nblocks = B * (S // bs) * 2
+    rng = np.random.default_rng(6)
+    rows = []
+
+    cache = pc.cache_create(L, nblocks, bs, KV, hd, max_seqs=B,
+                            max_blocks_per_seq=S // bs,
+                            dtype=jnp.float32)
+    k = jnp.asarray(rng.normal(size=(L, B, S, KV, hd)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(L, B, S, KV, hd)).astype(np.float32))
+    seq_ids = jnp.arange(B)
+    cache = pc.write_prefill(cache, seq_ids, k, v)
+    # fragment the block tables: shuffle logical->physical (the realistic
+    # post-eviction state the paper's fan-in lesson maps to)
+    tables = np.array(cache.block_tables)  # writable host copy
+    for b in range(B):
+        perm = rng.permutation(S // bs)
+        tables[b, :S // bs] = tables[b, :S // bs][perm]
+    # keep pool content consistent with the shuffled tables (content
+    # equality is tested elsewhere; here we only measure access cost)
+    cache = cache._replace(block_tables=jnp.asarray(tables))
+
+    t_paged = timeit(pc.gather_context, cache, seq_ids) * 1e3
+    rows.append(Row("kv_shortcut", "paged_gather_context", t_paged,
+                    "ms/step", f"B={B} S={S} (incl. layout transform)"))
+
+    # raw indirection cost, storage layout (no attention-layout transform
+    # — on CPU the transform dominates both paths and hides the gap)
+    import jax
+    @jax.jit
+    def paged_raw(cache, seq_ids):
+        tables = cache.block_tables[seq_ids]
+        safe = jnp.maximum(tables, 0)
+        return cache.k_pool[:, safe], cache.v_pool[:, safe]
+
+    t_paged_raw = timeit(paged_raw, cache, seq_ids) * 1e3
+    rows.append(Row("kv_shortcut", "paged_gather_raw", t_paged_raw,
+                    "ms/step", "two dependent indirections"))
+
+    # compose the shortcut view (create request) — the maintenance cost
+    view_k = jnp.zeros((L, B, S, KV, hd), jnp.float32)
+    view_v = jnp.zeros_like(view_k)
+    t0 = time.perf_counter()
+    for s in range(B):
+        view_k, view_v = compose_seq(cache, view_k, view_v, jnp.int32(s))
+    sync(view_k)
+    t_compose = (time.perf_counter() - t0) * 1e3
+    rows.append(Row("kv_shortcut", "compose_view_all_seqs", t_compose,
+                    "ms", "the create-request replay (async in prod)"))
+
+    t_short = timeit(slice_context, view_k, view_v, seq_ids) * 1e3
+    rows.append(Row("kv_shortcut", "shortcut_slice_context", t_short,
+                    "ms/step",
+                    f"speedup={t_paged / max(t_short, 1e-9):.2f}x "
+                    "(incl. layout transform)"))
+
+    @jax.jit
+    def short_raw(view_k, view_v, seq_ids):
+        return view_k[:, seq_ids], view_v[:, seq_ids]
+
+    t_short_raw = timeit(short_raw, view_k, view_v, seq_ids) * 1e3
+    rows.append(Row("kv_shortcut", "shortcut_slice_raw", t_short_raw,
+                    "ms/step",
+                    f"speedup={t_paged_raw / max(t_short_raw, 1e-9):.2f}x"
+                    " (pure indirection cost)"))
+
+    # per-token append maintenance (update request)
+    nk = jnp.asarray(rng.normal(size=(L, B, KV, hd)).astype(np.float32))
+    nv = jnp.asarray(rng.normal(size=(L, B, KV, hd)).astype(np.float32))
+    from repro.kvcache.shortcut_cache import append_to_view
+    pos = jnp.full((B,), S - 1, jnp.int32)
+    t_append = timeit(append_to_view, view_k, view_v, seq_ids, pos,
+                      nk, nv) * 1e6
+    rows.append(Row("kv_shortcut", "append_update_request", t_append,
+                    "us/step", "per-decode-token view maintenance"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

@@ -1,0 +1,58 @@
+"""Shared benchmark utilities.
+
+Scale note (DESIGN.md §7): the paper runs 100M inserts / 10M probes on a
+12700KF; this container is one CPU core running JAX, so benches default to
+1/64--1/100 scale. ``--scale 1.0`` restores paper sizes. The reproduction
+target is the SHAPE of each curve (staircase HT, graceful EH, shortcut
+crossover), with absolute times reported for this machine.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+
+
+def sync(x):
+    jax.block_until_ready(x)
+    return x
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 3, **kw):
+    """Median wall seconds of fn(*args) with device sync."""
+    for _ in range(warmup):
+        sync(fn(*args, **kw))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        sync(fn(*args, **kw))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def unique_keys(rng, n, lo=1, hi=2**31):
+    if n > (hi - lo) // 2:
+        raise ValueError("key space too small")
+    return rng.choice(np.arange(lo, hi, dtype=np.uint32), size=n,
+                      replace=False)
+
+
+@dataclass
+class Row:
+    bench: str
+    name: str
+    value: float
+    unit: str
+    extra: str = ""
+
+    def csv(self) -> str:
+        return f"{self.bench},{self.name},{self.value:.6g},{self.unit}," \
+            f"{self.extra}"
+
+
+def emit(rows):
+    print("bench,name,value,unit,extra")
+    for r in rows:
+        print(r.csv())

@@ -1,0 +1,95 @@
+"""Roofline aggregation: dry-run JSON records -> the §Roofline table.
+
+Reads ``results/<dir>/*.json`` produced by ``repro.launch.dryrun`` and
+emits the per-(arch x shape x mesh) table with the three terms, the
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPs, and a one-line "what would
+move the dominant term" note derived from the collective/byte mix.
+
+Usage: python -m benchmarks.roofline [--dir results/dryrun_baseline]
+       [--format md|csv]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def advice(rec: dict) -> str:
+    dom = rec.get("dominant")
+    coll = rec.get("collectives", {}).get("bytes", {})
+    if dom == "collective_s":
+        top = max(coll, key=coll.get) if coll else "?"
+        return f"cut {top} volume (resharding/dtype/overlap)"
+    if dom == "memory_s":
+        if rec["shape"].startswith(("decode", "long")):
+            return "stream cache once (Pallas decode kernel), drop " \
+                   "f32 round-trips"
+        return "fuse attention interior (Pallas flash), bf16 " \
+               "intermediates, selective remat"
+    return "increase arithmetic intensity (larger tiles/batch)"
+
+
+def load(dirpath: str) -> list:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def table(recs: list, fmt: str = "md") -> str:
+    hdr = ["arch", "shape", "mesh", "path", "compute_s", "memory_s",
+           "collective_s", "dominant", "useful_ratio", "roofline_frac",
+           "mem_GiB/dev", "next_move"]
+    lines = []
+    if fmt == "md":
+        lines.append("| " + " | ".join(hdr) + " |")
+        lines.append("|" + "---|" * len(hdr))
+    else:
+        lines.append(",".join(hdr))
+    for r in recs:
+        if r.get("status") == "skip":
+            row = [r["arch"], r["shape"], r["mesh"],
+                   r.get("path", "-"), "SKIP", "-", "-", "-", "-", "-",
+                   "-", r.get("reason", "")[:40]]
+        elif r.get("status") == "error":
+            row = [r["arch"], r["shape"], r["mesh"],
+                   r.get("path", "-"), "ERROR", "-", "-", "-", "-", "-",
+                   "-", r.get("error", "")[:40]]
+        else:
+            row = [
+                r["arch"], r["shape"], r["mesh"], r.get("path", "-"),
+                f"{r['compute_s']:.4f}", f"{r['memory_s']:.4f}",
+                f"{r['collective_s']:.4f}",
+                r["dominant"].replace("_s", ""),
+                f"{r['useful_flops_ratio']:.3f}",
+                f"{r['roofline_fraction']:.3f}",
+                f"{r['memory']['total_bytes'] / 2**30:.1f}",
+                advice(r),
+            ]
+        if fmt == "md":
+            lines.append("| " + " | ".join(str(c) for c in row) + " |")
+        else:
+            lines.append(",".join(str(c) for c in row))
+    return "\n".join(lines)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun_baseline")
+    ap.add_argument("--format", choices=["md", "csv"], default="md")
+    args = ap.parse_args(argv)
+    recs = load(args.dir)
+    if not recs:
+        print(f"no records in {args.dir} — run "
+              "`python -m repro.launch.dryrun --arch all --shape all "
+              f"--out {args.dir}` first")
+        return 1
+    print(table(recs, args.format))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,58 @@
+"""Benchmark harness entry point: one function per paper table/figure.
+
+``python -m benchmarks.run [--scale S] [--only table1,fig2,...]``
+
+Prints ``bench,name,value,unit,extra`` CSV rows.  The roofline table
+(§Roofline, from the multi-pod dry-run) is appended when dry-run records
+exist under results/dryrun_baseline.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks.common import Row, emit
+
+ALL = ("table1", "fig2", "fig4", "fig5", "fig7", "fig8", "kv_shortcut")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=1.0 / 100,
+                    help="fraction of paper-size workloads (1.0 = paper)")
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset of: " + ",".join(ALL))
+    ap.add_argument("--skip-roofline", action="store_true")
+    args = ap.parse_args(argv)
+    wanted = [b for b in args.only.split(",") if b] or list(ALL)
+
+    rows: list = []
+    failures = 0
+    for name in wanted:
+        mod = __import__(f"benchmarks.bench_{name}", fromlist=["run"])
+        t0 = time.time()
+        try:
+            rows += mod.run(scale=args.scale)
+            rows.append(Row(name, "_bench_wall", time.time() - t0, "s"))
+        except Exception as e:
+            failures += 1
+            rows.append(Row(name, "_bench_error", 0.0, "-",
+                            f"{type(e).__name__}: {e}"))
+            traceback.print_exc(file=sys.stderr)
+    emit(rows)
+
+    if not args.skip_roofline:
+        import os
+        for d in ("results/dryrun_final", "results/dryrun_baseline"):
+            if os.path.isdir(d):
+                from benchmarks import roofline
+                print(f"\n== Roofline (from multi-pod dry-run: {d}) ==")
+                roofline.main(["--dir", d])
+                break
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,85 @@
+"""Serving example: batched requests through BOTH access paths.
+
+Prefills a batch of prompts into the paged cache, decodes via (a) the
+block-table path and (b) the contiguous shortcut view, checks the outputs
+agree token-for-token, and prints the timing split — the KV-layer analogue
+of the paper's Figure 2.
+
+  PYTHONPATH=src python examples/serve_paged.py [--arch qwen3_4b]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get
+from repro.kvcache import paged_cache as pc
+from repro.models import model as M
+from repro.runtime.serve import (make_paged_serve_step, make_prefill_step,
+                                 make_serve_step)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3_4b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=48)
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = get(args.arch).reduced()
+    B, S, GEN = args.batch, args.prompt_len, args.gen
+    s_cap = S + GEN + 8
+    params = M.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                              cfg.vocab_size)
+
+    # --- shortcut path ----------------------------------------------------
+    prefill = make_prefill_step(cfg, s_cap=s_cap, dtype=jnp.float32)
+    serve_s = jax.jit(make_serve_step(cfg))
+    logits, state = prefill(params, {"tokens": toks})
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    short = [tok]
+    t0 = time.perf_counter()
+    for _ in range(GEN - 1):
+        tok, state = serve_s(params, state, tok)
+        short.append(tok)
+    jax.block_until_ready(tok)
+    t_short = time.perf_counter() - t0
+
+    # --- paged path ---------------------------------------------------------
+    bs = 8
+    cache = pc.cache_create(
+        cfg.num_layers, num_blocks=B * (s_cap // bs + 1), block_size=bs,
+        kv_heads=cfg.num_kv_heads, head_dim=cfg.resolved_head_dim,
+        max_seqs=B, max_blocks_per_seq=s_cap // bs + 1,
+        dtype=jnp.float32)
+    logits, caches = M.prefill_forward(params, cfg, {"tokens": toks})
+    cache = pc.write_prefill(cache, jnp.arange(B), caches.k, caches.v)
+    serve_p = jax.jit(make_paged_serve_step(cfg))
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    seq_ids = jnp.arange(B, dtype=jnp.int32)
+    paged = [tok]
+    t0 = time.perf_counter()
+    for _ in range(GEN - 1):
+        tok, cache = serve_p(params, cache, tok, seq_ids)
+        paged.append(tok)
+    jax.block_until_ready(tok)
+    t_paged = time.perf_counter() - t0
+
+    short_np = np.stack([np.asarray(t) for t in short], 1)
+    paged_np = np.stack([np.asarray(t) for t in paged], 1)
+    assert (short_np == paged_np).all(), "access paths must agree!"
+    print(f"arch={cfg.name} B={B} prompt={S} gen={GEN}")
+    print(f"  paged decode:    {t_paged * 1e3:7.1f} ms  "
+          f"({B * (GEN - 1) / t_paged:8.0f} tok/s)   [2 indirections]")
+    print(f"  shortcut decode: {t_short * 1e3:7.1f} ms  "
+          f"({B * (GEN - 1) / t_short:8.0f} tok/s)   [0 indirections]")
+    print(f"  outputs identical across paths ✓  "
+          f"sample: {short_np[0][:10].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

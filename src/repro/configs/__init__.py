@@ -1,0 +1,1 @@
+from repro.configs.base import ArchConfig, get, list_archs, register, ASSIGNED  # noqa: F401

@@ -1,0 +1,365 @@
+"""The paper's §4.2 baselines, jittable in JAX.
+
+  * :class:`HTState`  -- Hash Table (HT): one open-addressing / linear-probing
+    table, doubled + fully rehashed when the load factor crosses a threshold.
+  * :class:`HTIState` -- Hash Table Incremental (HTI, Redis-style [1]): as HT,
+    but the rehash moves only ``migrate_batch`` entries per access while both
+    tables co-exist; lookups inspect the fuller table first.
+  * :class:`CHState`  -- Chained Hashing (CH): fixed-size table of chain heads
+    over fixed 128 B buckets; overflow appends a bucket to the chain.
+
+All tables use the same multiplicative hash as the EH implementation
+(``extendible_hashing.hash_dir``), matching the paper's comparability setup.
+Static maximum capacities + dynamic active sizes keep everything jittable.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.extendible_hashing import EMPTY_KEY, MISS, hash_dir
+
+_PROBE_WINDOW = 32  # static linear-probe window; ample for load <= 0.35
+
+
+def _slot_of(h: jax.Array, size_log2: jax.Array) -> jax.Array:
+    """Open-addressing home slot: top ``size_log2`` bits (MSB, as in EH)."""
+    s = size_log2.astype(jnp.uint32)
+    return jnp.where(s == 0, jnp.uint32(0),
+                     h >> (jnp.uint32(32) - s)).astype(jnp.int32)
+
+
+def _probe_insert(keys, vals, key, value, size_log2):
+    """Linear-probe insert into the active prefix [0, 2^size_log2).
+
+    Returns (keys, vals, inserted_new, ok)."""
+    size = jnp.int32(1) << size_log2
+    home = _slot_of(hash_dir(key), size_log2)
+    pos = (home + jnp.arange(_PROBE_WINDOW, dtype=jnp.int32)) % size
+    probed = keys[pos]
+    usable = (probed == key.astype(jnp.uint32)) | (probed == EMPTY_KEY)
+    ok = jnp.any(usable)
+    idx = pos[jnp.argmax(usable)]
+    was_empty = keys[idx] == EMPTY_KEY
+    keys = keys.at[idx].set(jnp.where(ok, key.astype(jnp.uint32), keys[idx]))
+    vals = vals.at[idx].set(jnp.where(ok, value.astype(jnp.uint32), vals[idx]))
+    return keys, vals, (ok & was_empty).astype(jnp.int32), ok
+
+
+def _probe_find(keys, vals, key, size_log2):
+    size = jnp.int32(1) << size_log2
+    home = _slot_of(hash_dir(key), size_log2)
+    pos = (home + jnp.arange(_PROBE_WINDOW, dtype=jnp.int32)) % size
+    probed = keys[pos]
+    hit = probed == key.astype(jnp.uint32)
+    empties = probed == EMPTY_KEY
+    before = jnp.cumsum(empties.astype(jnp.int32)) - empties.astype(jnp.int32)
+    live_hit = hit & (before == 0)
+    found = jnp.any(live_hit)
+    return jnp.where(found, vals[pos[jnp.argmax(live_hit)]], MISS)
+
+
+# ---------------------------------------------------------------------------
+# HT: full-stop rehash.
+# ---------------------------------------------------------------------------
+
+class HTState(NamedTuple):
+    keys: jax.Array       # (max_cap,) uint32
+    vals: jax.Array       # (max_cap,) uint32
+    size_log2: jax.Array  # () int32
+    count: jax.Array      # () int32
+    dropped: jax.Array    # () int32
+
+    @property
+    def max_size_log2(self) -> int:
+        return int(self.keys.shape[0]).bit_length() - 1
+
+
+def ht_create(max_size_log2: int, initial_size_log2: int = 9) -> HTState:
+    cap = 1 << max_size_log2
+    return HTState(
+        keys=jnp.full((cap,), EMPTY_KEY, jnp.uint32),
+        vals=jnp.zeros((cap,), jnp.uint32),
+        size_log2=jnp.int32(initial_size_log2),
+        count=jnp.zeros((), jnp.int32),
+        dropped=jnp.zeros((), jnp.int32),
+    )
+
+
+def _ht_rehash_doubled(st: HTState) -> HTState:
+    """Allocate 2x and move every entry (the staircase step of Fig. 7a)."""
+    new_log2 = jnp.minimum(st.size_log2 + 1, st.max_size_log2)
+
+    def move(i, carry):
+        keys, vals = carry
+        key = st.keys[i]
+        val = st.vals[i]
+
+        def do(kv):
+            k, v = kv
+            k, v, _, _ = _probe_insert(k, v, key, val, new_log2)
+            return k, v
+
+        return jax.lax.cond(key != EMPTY_KEY, do, lambda kv: kv, (keys, vals))
+
+    empty = jnp.full_like(st.keys, EMPTY_KEY), jnp.zeros_like(st.vals)
+    keys, vals = jax.lax.fori_loop(0, st.keys.shape[0], move, empty)
+    return st._replace(keys=keys, vals=vals, size_log2=new_log2)
+
+
+def ht_insert(st: HTState, key, value,
+              load_threshold: float = 0.35) -> HTState:
+    size = (jnp.int32(1) << st.size_log2).astype(jnp.float32)
+    needs = (st.count.astype(jnp.float32) + 1.0) > load_threshold * size
+    can = st.size_log2 < st.max_size_log2
+    st = jax.lax.cond(needs & can, _ht_rehash_doubled, lambda s: s, st)
+    keys, vals, inew, ok = _probe_insert(
+        st.keys, st.vals, key, value, st.size_log2)
+    return st._replace(keys=keys, vals=vals, count=st.count + inew,
+                       dropped=st.dropped + (1 - ok.astype(jnp.int32)))
+
+
+@jax.jit
+def ht_insert_many(st: HTState, keys, values) -> HTState:
+    def body(s, kv):
+        return ht_insert(s, kv[0], kv[1]), None
+    st, _ = jax.lax.scan(body, st, jnp.stack(
+        [keys.astype(jnp.uint32), values.astype(jnp.uint32)], axis=1))
+    return st
+
+
+@jax.jit
+def ht_lookup_many(st: HTState, keys) -> jax.Array:
+    return jax.vmap(
+        lambda k: _probe_find(st.keys, st.vals, k, st.size_log2)
+    )(keys.astype(jnp.uint32))
+
+
+# ---------------------------------------------------------------------------
+# HTI: Redis-style incremental rehash.
+# ---------------------------------------------------------------------------
+
+class HTIState(NamedTuple):
+    old_keys: jax.Array
+    old_vals: jax.Array
+    new_keys: jax.Array
+    new_vals: jax.Array
+    old_log2: jax.Array
+    new_log2: jax.Array
+    old_count: jax.Array
+    new_count: jax.Array
+    migrate_ptr: jax.Array  # () int32; == 2^old_log2 when drained
+    migrating: jax.Array    # () bool_
+    dropped: jax.Array
+
+    @property
+    def max_size_log2(self) -> int:
+        return int(self.new_keys.shape[0]).bit_length() - 1
+
+
+def hti_create(max_size_log2: int, initial_size_log2: int = 9) -> HTIState:
+    cap = 1 << max_size_log2
+    z = lambda: jnp.full((cap,), EMPTY_KEY, jnp.uint32)
+    v = lambda: jnp.zeros((cap,), jnp.uint32)
+    return HTIState(
+        old_keys=z(), old_vals=v(), new_keys=z(), new_vals=v(),
+        old_log2=jnp.int32(initial_size_log2),
+        new_log2=jnp.int32(initial_size_log2),
+        old_count=jnp.zeros((), jnp.int32),
+        new_count=jnp.zeros((), jnp.int32),
+        migrate_ptr=jnp.int32(1 << initial_size_log2),
+        migrating=jnp.zeros((), jnp.bool_),
+        dropped=jnp.zeros((), jnp.int32),
+    )
+
+
+def _hti_migrate(st: HTIState, batch: int) -> HTIState:
+    """Move up to ``batch`` live entries old -> new (one Redis rehash step)."""
+    def step(_, s: HTIState) -> HTIState:
+        def move(s: HTIState) -> HTIState:
+            i = s.migrate_ptr
+            key, val = s.old_keys[i], s.old_vals[i]
+
+            def do(s: HTIState) -> HTIState:
+                k, v, inew, _ = _probe_insert(
+                    s.new_keys, s.new_vals, key, val, s.new_log2)
+                return s._replace(
+                    new_keys=k, new_vals=v, new_count=s.new_count + inew,
+                    old_keys=s.old_keys.at[i].set(EMPTY_KEY),
+                    old_count=s.old_count - 1)
+
+            s = jax.lax.cond(key != EMPTY_KEY, do, lambda x: x, s)
+            return s._replace(migrate_ptr=i + 1)
+
+        active = s.migrating & (s.migrate_ptr < (jnp.int32(1) << s.old_log2))
+        return jax.lax.cond(active, move, lambda x: x, s)
+
+    st = jax.lax.fori_loop(0, batch, step, st)
+    drained = st.migrate_ptr >= (jnp.int32(1) << st.old_log2)
+    return st._replace(migrating=st.migrating & ~drained)
+
+
+def hti_insert(st: HTIState, key, value, load_threshold: float = 0.35,
+               migrate_batch: int = 64) -> HTIState:
+    st = _hti_migrate(st, migrate_batch)
+    size = (jnp.int32(1) << st.new_log2).astype(jnp.float32)
+    needs = ((st.new_count + st.old_count).astype(jnp.float32) + 1.0) \
+        > load_threshold * size
+    can = (~st.migrating) & (st.new_log2 < st.max_size_log2)
+
+    def start_migration(s: HTIState) -> HTIState:
+        return HTIState(
+            old_keys=s.new_keys, old_vals=s.new_vals,
+            new_keys=jnp.full_like(s.new_keys, EMPTY_KEY),
+            new_vals=jnp.zeros_like(s.new_vals),
+            old_log2=s.new_log2, new_log2=s.new_log2 + 1,
+            old_count=s.new_count, new_count=jnp.zeros((), jnp.int32),
+            migrate_ptr=jnp.zeros((), jnp.int32),
+            migrating=jnp.ones((), jnp.bool_), dropped=s.dropped)
+
+    st = jax.lax.cond(needs & can, start_migration, lambda s: s, st)
+    keys, vals, inew, ok = _probe_insert(
+        st.new_keys, st.new_vals, key, value, st.new_log2)
+    return st._replace(new_keys=keys, new_vals=vals,
+                       new_count=st.new_count + inew,
+                       dropped=st.dropped + (1 - ok.astype(jnp.int32)))
+
+
+@functools.partial(jax.jit, static_argnames=("migrate_batch",))
+def hti_insert_many(st: HTIState, keys, values,
+                    migrate_batch: int = 64) -> HTIState:
+    def body(s, kv):
+        return hti_insert(s, kv[0], kv[1],
+                          migrate_batch=migrate_batch), None
+    st, _ = jax.lax.scan(body, st, jnp.stack(
+        [keys.astype(jnp.uint32), values.astype(jnp.uint32)], axis=1))
+    return st
+
+
+def hti_lookup(st: HTIState, key) -> jax.Array:
+    """Check the fuller table first, fall back to the other (paper §4.2)."""
+    from_new = _probe_find(st.new_keys, st.new_vals, key, st.new_log2)
+    from_old = _probe_find(st.old_keys, st.old_vals, key, st.old_log2)
+    new_first = st.new_count >= st.old_count
+    first = jnp.where(new_first, from_new, from_old)
+    second = jnp.where(new_first, from_old, from_new)
+    return jnp.where(first != MISS, first, second)
+
+
+@jax.jit
+def hti_lookup_many(st: HTIState, keys) -> jax.Array:
+    return jax.vmap(lambda k: hti_lookup(st, k))(keys.astype(jnp.uint32))
+
+
+# ---------------------------------------------------------------------------
+# CH: chained hashing over fixed 128 B buckets.
+# ---------------------------------------------------------------------------
+
+class CHState(NamedTuple):
+    heads: jax.Array        # (table_size,) int32 chain head bucket id or -1
+    bucket_keys: jax.Array  # (capacity, bucket_slots) uint32
+    bucket_vals: jax.Array  # (capacity, bucket_slots) uint32
+    next_bucket: jax.Array  # (capacity,) int32 link or -1
+    counts: jax.Array       # (capacity,) int32
+    num_buckets: jax.Array  # () int32
+    dropped: jax.Array
+
+    @property
+    def table_log2(self) -> int:
+        return int(self.heads.shape[0]).bit_length() - 1
+
+
+def ch_create(table_log2: int, capacity: int,
+              bucket_slots: int = 16) -> CHState:
+    return CHState(
+        heads=jnp.full((1 << table_log2,), -1, jnp.int32),
+        bucket_keys=jnp.full((capacity, bucket_slots), EMPTY_KEY, jnp.uint32),
+        bucket_vals=jnp.zeros((capacity, bucket_slots), jnp.uint32),
+        next_bucket=jnp.full((capacity,), -1, jnp.int32),
+        counts=jnp.zeros((capacity,), jnp.int32),
+        num_buckets=jnp.zeros((), jnp.int32),
+        dropped=jnp.zeros((), jnp.int32),
+    )
+
+
+def _ch_tail(st: CHState, head: jax.Array):
+    """Walk to the chain's last bucket (or -1 for an empty chain)."""
+    def cond(c):
+        cur = c
+        return (cur >= 0) & (st.next_bucket[cur] >= 0)
+    return jax.lax.while_loop(cond, lambda c: st.next_bucket[c], head)
+
+
+def ch_insert(st: CHState, key, value) -> CHState:
+    slot = _slot_of(hash_dir(key), jnp.int32(st.table_log2))
+    tail = _ch_tail(st, st.heads[slot])
+    bucket_slots = st.bucket_keys.shape[1]
+    tail_has_room = jnp.where(
+        tail >= 0, st.counts[jnp.maximum(tail, 0)] < bucket_slots, False)
+    can_alloc = st.num_buckets < st.bucket_keys.shape[0]
+
+    def into_tail(s: CHState) -> CHState:
+        i = s.counts[tail]  # append position (no deletes in the workload)
+        return s._replace(
+            bucket_keys=s.bucket_keys.at[tail, i].set(key.astype(jnp.uint32)),
+            bucket_vals=s.bucket_vals.at[tail, i].set(
+                value.astype(jnp.uint32)),
+            counts=s.counts.at[tail].add(1))
+
+    def into_new(s: CHState) -> CHState:
+        b = s.num_buckets
+        s = s._replace(
+            bucket_keys=s.bucket_keys.at[b, 0].set(key.astype(jnp.uint32)),
+            bucket_vals=s.bucket_vals.at[b, 0].set(value.astype(jnp.uint32)),
+            counts=s.counts.at[b].set(1),
+            num_buckets=s.num_buckets + 1)
+        # link: empty chain -> head, else tail.next
+        s = jax.lax.cond(
+            tail < 0,
+            lambda x: x._replace(heads=x.heads.at[slot].set(b)),
+            lambda x: x._replace(next_bucket=x.next_bucket.at[tail].set(b)),
+            s)
+        return s
+
+    def dropped(s: CHState) -> CHState:
+        return s._replace(dropped=s.dropped + 1)
+
+    return jax.lax.cond(
+        tail_has_room, into_tail,
+        lambda s: jax.lax.cond(can_alloc, into_new, dropped, s), st)
+
+
+@jax.jit
+def ch_insert_many(st: CHState, keys, values) -> CHState:
+    def body(s, kv):
+        return ch_insert(s, kv[0], kv[1]), None
+    st, _ = jax.lax.scan(body, st, jnp.stack(
+        [keys.astype(jnp.uint32), values.astype(jnp.uint32)], axis=1))
+    return st
+
+
+def ch_lookup(st: CHState, key) -> jax.Array:
+    slot = _slot_of(hash_dir(key), jnp.int32(st.table_log2))
+
+    def cond(c):
+        cur, found = c
+        return (cur >= 0) & (found == MISS)
+
+    def body(c):
+        cur, _ = c
+        row = st.bucket_keys[cur]
+        hit = row == key.astype(jnp.uint32)
+        found = jnp.any(hit)
+        val = jnp.where(found, st.bucket_vals[cur][jnp.argmax(hit)], MISS)
+        return jnp.where(found, cur, st.next_bucket[cur]), val
+
+    _, val = jax.lax.while_loop(cond, body, (st.heads[slot], MISS))
+    return val
+
+
+@jax.jit
+def ch_lookup_many(st: CHState, keys) -> jax.Array:
+    return jax.vmap(lambda k: ch_lookup(st, k))(keys.astype(jnp.uint32))

@@ -1,0 +1,374 @@
+"""Extendible hashing (Fagin et al. [3]) as a pure-functional, jittable JAX
+data structure — the paper's showcase index (§4).
+
+Layout (all arrays statically sized, validity tracked by scalars):
+
+  * ``directory``    -- (max_dir,) int32; the first ``2**global_depth`` slots
+                        are valid and hold bucket ids.  Indexed by the
+                        *most significant* ``global_depth`` bits of the hash
+                        (as in the paper), so all slots referencing one bucket
+                        form a contiguous range — the precondition for
+                        coalesced remapping (``rewiring.remap_range``).
+  * ``bucket_keys``/``bucket_vals`` -- (capacity, bucket_slots); a bucket is a
+                        4 KB page analogue.  Open addressing / linear probing
+                        *within* a bucket, as in the paper's evaluation.
+  * ``local_depth``  -- (capacity,) int32 per-bucket depth.
+  * ``counts``       -- (capacity,) int32 live entries per bucket.
+  * ``num_buckets``  -- () int32 bump-allocator high-water mark (EH never
+                        frees buckets; the KV-cache layer exercises the pool's
+                        free ring instead).
+
+Hashing: the paper uses one "lightweight multiplicative hash" for the
+directory slot and a second one for the bucket slot; we use Knuth's golden
+ratio constants on uint32.
+
+All mutating ops return a new state (functional); batched insertion is a
+``lax.scan``, batched lookup a ``vmap``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+EMPTY_KEY = jnp.uint32(0xFFFFFFFF)   # sentinel: slot unused
+MISS = jnp.uint32(0xFFFFFFFF)        # lookup miss marker
+_HASH_C1 = jnp.uint32(2654435761)    # Knuth multiplicative (directory)
+_HASH_C2 = jnp.uint32(0x9E3779B1)    # golden-ratio variant (bucket slot)
+
+
+class EHState(NamedTuple):
+    directory: jax.Array     # (max_dir,) int32 bucket ids
+    bucket_keys: jax.Array   # (capacity, bucket_slots) uint32
+    bucket_vals: jax.Array   # (capacity, bucket_slots) uint32
+    counts: jax.Array        # (capacity,) int32
+    local_depth: jax.Array   # (capacity,) int32
+    global_depth: jax.Array  # () int32
+    num_buckets: jax.Array   # () int32
+    dropped: jax.Array       # () int32  inserts refused (capacity exhausted)
+
+    @property
+    def max_global_depth(self) -> int:
+        return int(self.directory.shape[0]).bit_length() - 1
+
+    @property
+    def capacity(self) -> int:
+        return self.bucket_keys.shape[0]
+
+    @property
+    def bucket_slots(self) -> int:
+        return self.bucket_keys.shape[1]
+
+
+def hash_dir(key: jax.Array) -> jax.Array:
+    """Primary multiplicative hash; directory uses its most significant bits."""
+    return (key.astype(jnp.uint32) * _HASH_C1).astype(jnp.uint32)
+
+
+def hash_bucket(key: jax.Array) -> jax.Array:
+    """Secondary hash for the slot within a bucket."""
+    k = key.astype(jnp.uint32) * _HASH_C2
+    return (k ^ (k >> jnp.uint32(16))).astype(jnp.uint32)
+
+
+def dir_slot(h: jax.Array, global_depth: jax.Array) -> jax.Array:
+    """Most-significant-bit directory slot; depth 0 => single slot 0."""
+    g = global_depth.astype(jnp.uint32)
+    # uint32 >> 32 is undefined; guard depth 0.
+    return jnp.where(g == 0, jnp.uint32(0),
+                     h >> (jnp.uint32(32) - g)).astype(jnp.int32)
+
+
+def eh_create(max_global_depth: int, bucket_slots: int,
+              capacity: int) -> EHState:
+    """One empty bucket, one directory slot (the paper's 4 KB start state)."""
+    assert capacity >= 1
+    return EHState(
+        directory=jnp.zeros((1 << max_global_depth,), jnp.int32),
+        bucket_keys=jnp.full((capacity, bucket_slots), EMPTY_KEY, jnp.uint32),
+        bucket_vals=jnp.zeros((capacity, bucket_slots), jnp.uint32),
+        counts=jnp.zeros((capacity,), jnp.int32),
+        local_depth=jnp.zeros((capacity,), jnp.int32),
+        global_depth=jnp.zeros((), jnp.int32),
+        num_buckets=jnp.ones((), jnp.int32),
+        dropped=jnp.zeros((), jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Intra-bucket open addressing (vectorized probe, no loops).
+# ---------------------------------------------------------------------------
+
+def _probe_positions(key: jax.Array, bucket_slots: int) -> jax.Array:
+    start = hash_bucket(key) % jnp.uint32(bucket_slots)
+    return ((start + jnp.arange(bucket_slots, dtype=jnp.uint32))
+            % jnp.uint32(bucket_slots)).astype(jnp.int32)
+
+
+def bucket_find(keys_row: jax.Array, key: jax.Array) -> jax.Array:
+    """Probe a bucket row; return slot index of ``key`` or -1."""
+    pos = _probe_positions(key, keys_row.shape[0])
+    probed = keys_row[pos]
+    hit = probed == key.astype(jnp.uint32)
+    # linear probing stops at the first EMPTY slot
+    empty_before = jnp.cumsum((probed == EMPTY_KEY).astype(jnp.int32)) \
+        - (probed == EMPTY_KEY).astype(jnp.int32)
+    live_hit = hit & (empty_before == 0)
+    found = jnp.any(live_hit)
+    return jnp.where(found, pos[jnp.argmax(live_hit)], -1)
+
+
+def bucket_put(keys_row: jax.Array, vals_row: jax.Array, key: jax.Array,
+               value: jax.Array):
+    """Insert/overwrite (key,value) in a bucket row.
+
+    Returns (keys_row, vals_row, inserted_new, ok):
+      inserted_new -- 1 if a fresh slot was consumed (count must grow)
+      ok           -- 0 if the bucket was full and key absent
+    """
+    pos = _probe_positions(key, keys_row.shape[0])
+    probed = keys_row[pos]
+    is_match = probed == key.astype(jnp.uint32)
+    is_empty = probed == EMPTY_KEY
+    usable = is_match | is_empty
+    ok = jnp.any(usable)
+    idx = pos[jnp.argmax(usable)]
+    was_empty = keys_row[idx] == EMPTY_KEY
+    keys_row = keys_row.at[idx].set(
+        jnp.where(ok, key.astype(jnp.uint32), keys_row[idx]))
+    vals_row = vals_row.at[idx].set(
+        jnp.where(ok, value.astype(jnp.uint32), vals_row[idx]))
+    inserted_new = (ok & was_empty).astype(jnp.int32)
+    return keys_row, vals_row, inserted_new, ok
+
+
+# ---------------------------------------------------------------------------
+# Directory maintenance: doubling and bucket split.
+# ---------------------------------------------------------------------------
+
+def _double_directory(st: EHState) -> EHState:
+    """MSB indexing: each valid slot i fans out to slots 2i, 2i+1."""
+    max_dir = st.directory.shape[0]
+    idx = jnp.arange(max_dir, dtype=jnp.int32)
+    grown = st.directory[idx >> 1]
+    valid = idx < (1 << (st.global_depth + 1))
+    return st._replace(
+        directory=jnp.where(valid, grown, st.directory),
+        global_depth=st.global_depth + 1,
+    )
+
+
+def _split_bucket(st: EHState, h: jax.Array) -> EHState:
+    """Split the bucket addressed by hash ``h`` (paper Fig. 6 step)."""
+    st = jax.lax.cond(
+        st.local_depth[st.directory[dir_slot(h, st.global_depth)]]
+        == st.global_depth,
+        _double_directory, lambda s: s, st)
+
+    g = st.global_depth
+    slot = dir_slot(h, g)
+    b = st.directory[slot]
+    l = st.local_depth[b]
+    b2 = st.num_buckets  # bump allocation
+
+    # Redistribute entries of b between b and b2 on hash bit (l+1) from the top.
+    old_keys = st.bucket_keys[b]
+    old_vals = st.bucket_vals[b]
+    slots = st.bucket_slots
+    empty_row = jnp.full((slots,), EMPTY_KEY, jnp.uint32)
+    zero_row = jnp.zeros((slots,), jnp.uint32)
+
+    def redistribute(i, carry):
+        k0, v0, c0, k1, v1, c1 = carry
+        key = old_keys[i]
+        val = old_vals[i]
+        live = key != EMPTY_KEY
+        bit = (hash_dir(key) >> (jnp.uint32(31) - l.astype(jnp.uint32))) \
+            & jnp.uint32(1)
+        to_new = live & (bit == 1)
+        to_old = live & (bit == 0)
+        nk0, nv0, inew0, _ = bucket_put(k0, v0, key, val)
+        nk1, nv1, inew1, _ = bucket_put(k1, v1, key, val)
+        k0 = jnp.where(to_old, nk0, k0)
+        v0 = jnp.where(to_old, nv0, v0)
+        c0 = c0 + jnp.where(to_old, inew0, 0)
+        k1 = jnp.where(to_new, nk1, k1)
+        v1 = jnp.where(to_new, nv1, v1)
+        c1 = c1 + jnp.where(to_new, inew1, 0)
+        return k0, v0, c0, k1, v1, c1
+
+    k0, v0, c0, k1, v1, c1 = jax.lax.fori_loop(
+        0, slots, redistribute,
+        (empty_row, zero_row, jnp.int32(0), empty_row, zero_row, jnp.int32(0)))
+
+    # Directory range [start, start+2^(g-l)) pointed at b; upper half -> b2.
+    shift = (g - l).astype(jnp.uint32)
+    start = (slot >> shift) << shift
+    length = jnp.int32(1) << (g - l)
+    half = length >> 1
+    idx = jnp.arange(st.directory.shape[0], dtype=jnp.int32)
+    in_upper = (idx >= start + half) & (idx < start + length)
+    return st._replace(
+        directory=jnp.where(in_upper, b2, st.directory),
+        bucket_keys=st.bucket_keys.at[b].set(k0).at[b2].set(k1),
+        bucket_vals=st.bucket_vals.at[b].set(v0).at[b2].set(v1),
+        counts=st.counts.at[b].set(c0).at[b2].set(c1),
+        local_depth=st.local_depth.at[b].set(l + 1).at[b2].set(l + 1),
+        num_buckets=st.num_buckets + 1,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Public ops.
+# ---------------------------------------------------------------------------
+
+def eh_insert(st: EHState, key: jax.Array, value: jax.Array) -> EHState:
+    """Insert (key, value); splits (possibly cascading) handled in-line."""
+    h = hash_dir(key)
+
+    def needs_split(s: EHState):
+        b = s.directory[dir_slot(h, s.global_depth)]
+        full = s.counts[b] >= s.bucket_slots
+        present = bucket_find(s.bucket_keys[b], key) >= 0
+        can_grow = (s.num_buckets < s.capacity) & \
+            ((s.local_depth[b] < s.global_depth) |
+             (s.global_depth < s.max_global_depth))
+        return full & ~present & can_grow
+
+    st = jax.lax.while_loop(needs_split, lambda s: _split_bucket(s, h), st)
+
+    b = st.directory[dir_slot(h, st.global_depth)]
+    nk, nv, inserted_new, ok = bucket_put(
+        st.bucket_keys[b], st.bucket_vals[b], key, value)
+    return st._replace(
+        bucket_keys=st.bucket_keys.at[b].set(
+            jnp.where(ok, nk, st.bucket_keys[b])),
+        bucket_vals=st.bucket_vals.at[b].set(
+            jnp.where(ok, nv, st.bucket_vals[b])),
+        counts=st.counts.at[b].add(inserted_new),
+        dropped=st.dropped + (1 - ok.astype(jnp.int32)),
+    )
+
+
+@jax.jit
+def eh_insert_many(st: EHState, keys: jax.Array,
+                   values: jax.Array) -> EHState:
+    """Sequential batch insert (splits serialize inserts by nature)."""
+    def body(s, kv):
+        return eh_insert(s, kv[0], kv[1]), None
+    st, _ = jax.lax.scan(body, st, jnp.stack(
+        [keys.astype(jnp.uint32), values.astype(jnp.uint32)], axis=1))
+    return st
+
+
+def eh_lookup(st: EHState, key: jax.Array) -> jax.Array:
+    """Traditional path: directory gather -> bucket gather -> probe."""
+    b = st.directory[dir_slot(hash_dir(key), st.global_depth)]
+    idx = bucket_find(st.bucket_keys[b], key)
+    return jnp.where(idx >= 0, st.bucket_vals[b][idx], MISS)
+
+
+@jax.jit
+def eh_lookup_many(st: EHState, keys: jax.Array) -> jax.Array:
+    return jax.vmap(lambda k: eh_lookup(st, k))(keys.astype(jnp.uint32))
+
+
+# ---------------------------------------------------------------------------
+# Shortcut path: lookups against a pre-composed view (rewiring.compose of the
+# bucket pages by the directory).  One indirection instead of two.
+# ---------------------------------------------------------------------------
+
+def shortcut_lookup(view_keys: jax.Array, view_vals: jax.Array,
+                    global_depth: jax.Array, key: jax.Array) -> jax.Array:
+    """Lookup through the composed view: slot arithmetic + one gather."""
+    slot = dir_slot(hash_dir(key), global_depth)
+    idx = bucket_find(view_keys[slot], key)
+    return jnp.where(idx >= 0, view_vals[slot][idx], MISS)
+
+
+@jax.jit
+def shortcut_lookup_many(view_keys: jax.Array, view_vals: jax.Array,
+                         global_depth: jax.Array,
+                         keys: jax.Array) -> jax.Array:
+    return jax.vmap(
+        lambda k: shortcut_lookup(view_keys, view_vals, global_depth, k)
+    )(keys.astype(jnp.uint32))
+
+
+@functools.partial(jax.jit, static_argnames=("view_slots",))
+def compose_shortcut(st: EHState, view_slots: int):
+    """Create-request replay: materialize (view_keys, view_vals) for the first
+    ``view_slots`` directory slots (a static power of two >= 2**global_depth).
+
+    This is the expensive one-shot 'mmap loop' of the paper's step (2); the
+    ShortcutEH wrapper runs it asynchronously.
+    """
+    idx = jnp.arange(view_slots, dtype=jnp.int32)
+    valid = idx < (1 << st.global_depth)
+    src = jnp.where(valid, st.directory[:view_slots], 0)
+    return st.bucket_keys[src], st.bucket_vals[src]
+
+
+# ---------------------------------------------------------------------------
+# Introspection used by routing and tests.
+# ---------------------------------------------------------------------------
+
+def avg_fan_in(st: EHState) -> jax.Array:
+    """Average number of directory slots per bucket = 2^g / #buckets."""
+    return (jnp.int32(1) << st.global_depth).astype(jnp.float32) \
+        / st.num_buckets.astype(jnp.float32)
+
+
+def eh_num_entries(st: EHState) -> jax.Array:
+    return jnp.sum(st.counts)
+
+
+def check_invariants(st: EHState) -> dict:
+    """Host-side invariant checks (used by property tests).
+
+    I1: every valid directory slot points to an allocated bucket.
+    I2: bucket b with local depth l is referenced by exactly 2^(g-l)
+        *contiguous* slots whose top-l hash bits are constant.
+    I3: local_depth <= global_depth for all allocated buckets.
+    I4: every live key is stored in the bucket its hash addresses.
+    I5: counts match the number of non-empty slots.
+    """
+    import numpy as np
+    g = int(st.global_depth)
+    nd = 1 << g
+    directory = np.asarray(st.directory[:nd])
+    nb = int(st.num_buckets)
+    out = {"ok": True, "errors": []}
+
+    def fail(msg):
+        out["ok"] = False
+        out["errors"].append(msg)
+
+    if not ((directory >= 0) & (directory < nb)).all():
+        fail("I1: dangling directory slot")
+    ld = np.asarray(st.local_depth[:nb])
+    if (ld > g).any():
+        fail("I3: local depth exceeds global depth")
+    ref_counts = {}
+    for slot, b in enumerate(directory):
+        ref_counts.setdefault(int(b), []).append(slot)
+    for b, slots in ref_counts.items():
+        expect = 1 << (g - int(ld[b]))
+        if len(slots) != expect:
+            fail(f"I2: bucket {b} referenced {len(slots)}x, expect {expect}")
+        if slots != list(range(slots[0], slots[0] + len(slots))):
+            fail(f"I2: bucket {b} slots not contiguous")
+    keys = np.asarray(st.bucket_keys[:nb])
+    counts = np.asarray(st.counts[:nb])
+    live = keys != np.uint32(0xFFFFFFFF)
+    if not (live.sum(axis=1) == counts).all():
+        fail("I5: counts mismatch")
+    for b in range(nb):
+        for k in keys[b][live[b]]:
+            h = (np.uint64(k) * np.uint64(2654435761)) & np.uint64(0xFFFFFFFF)
+            slot = int(h >> np.uint64(32 - g)) if g > 0 else 0
+            if int(directory[slot]) != b:
+                fail(f"I4: key {k} misplaced (bucket {b}, slot {slot})")
+    return out

@@ -1,0 +1,176 @@
+"""Memory-rewiring abstraction: the TPU/JAX analogue of RUMA-style rewiring.
+
+The paper builds shortcuts out of three OS facilities:
+
+  * a *physical page pool*  -- a ``memfd_create`` main-memory file that grows/
+    shrinks with ``ftruncate`` and keeps a queue of free page offsets,
+  * a *virtual memory area* -- ``mmap(MAP_ANON)`` reservations, and
+  * *rewiring*              -- per-page ``mmap(MAP_SHARED|MAP_FIXED)`` calls
+    that point virtual pages straight at pool pages.
+
+On TPU none of these exist, so we adapt the *insight* (see DESIGN.md section 2):
+
+  * :class:`PagePool`  -- a preallocated ``(capacity, page_slots)`` HBM array
+    plus a ring-buffer free list.  ``alloc``/``free`` mirror the paper's
+    offset queue; the high-water mark mirrors the ``ftruncate`` size.
+  * a *composed view*  -- ``view = pool.pages[directory]``: the one-time
+    materialization that replaces the page-table remap.  After composition the
+    hot path performs **address arithmetic + one contiguous read** instead of
+    two dependent gathers, which is exactly the indirection count the paper's
+    shortcut achieves (one hardware-resolved translation).
+  * :func:`remap_slots` -- the per-slot ``mmap`` replay used by *update*
+    maintenance requests.
+
+Everything here is functional and jittable; host-side orchestration lives in
+``shortcut_eh.py``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class PagePool(NamedTuple):
+    """A self-managed pool of physical pages (the ``memfd`` analogue).
+
+    ``pages``     -- (capacity, page_slots) backing storage.
+    ``free_ring`` -- ring buffer of free page offsets (the paper's queue of
+                     unused offsets).
+    ``free_head`` -- index of the next offset to pop.
+    ``free_count``-- number of offsets currently in the ring.
+    ``size``      -- high-water mark: pages [0, size) have been handed out at
+                     least once (the ``ftruncate`` file size).
+    """
+
+    pages: jax.Array       # (capacity, page_slots) payload
+    free_ring: jax.Array   # (capacity,) int32 ring buffer of free offsets
+    free_head: jax.Array   # () int32
+    free_count: jax.Array  # () int32
+    size: jax.Array        # () int32 high-water mark
+
+    @property
+    def capacity(self) -> int:
+        return self.pages.shape[0]
+
+    @property
+    def page_shape(self) -> tuple[int, ...]:
+        return self.pages.shape[1:]
+
+    @property
+    def page_slots(self) -> int:
+        return self.pages.shape[1]
+
+
+def pool_create(capacity: int, page_slots, dtype=jnp.int32,
+                fill=0) -> PagePool:
+    """Create an empty pool. ``fill`` initializes pages (hard-fault avoidance
+    in the paper; here it fixes the sentinel for empty slots).
+
+    ``page_slots`` may be an int (flat pages) or a tuple (structured pages,
+    e.g. ``(block_size, kv_heads, head_dim)`` for KV-cache pages).
+    """
+    shape = (page_slots,) if isinstance(page_slots, int) else tuple(page_slots)
+    return PagePool(
+        pages=jnp.full((capacity,) + shape, fill, dtype=dtype),
+        free_ring=jnp.zeros((capacity,), jnp.int32),
+        free_head=jnp.zeros((), jnp.int32),
+        free_count=jnp.zeros((), jnp.int32),
+        size=jnp.zeros((), jnp.int32),
+    )
+
+
+def pool_alloc(pool: PagePool) -> tuple[PagePool, jax.Array]:
+    """Pop a free offset if available, else extend the high-water mark.
+
+    Returns ``(pool, offset)``; ``offset == -1`` signals exhaustion (the
+    caller decides whether that is a hard error).
+    """
+    def from_ring(p: PagePool):
+        off = p.free_ring[p.free_head % p.capacity]
+        return p._replace(
+            free_head=(p.free_head + 1) % p.capacity,
+            free_count=p.free_count - 1,
+        ), off
+
+    def from_hwm(p: PagePool):
+        off = jnp.where(p.size < p.capacity, p.size, -1)
+        return p._replace(size=jnp.minimum(p.size + 1, p.capacity)), off
+
+    return jax.lax.cond(pool.free_count > 0, from_ring, from_hwm, pool)
+
+
+def pool_free(pool: PagePool, offset: jax.Array,
+              reset_fill=None) -> PagePool:
+    """Return ``offset`` to the free ring (the paper shrinks the file when the
+    freed page is at the end; with fixed capacity we always ring-buffer it).
+    ``reset_fill`` optionally re-initializes the page payload."""
+    tail = (pool.free_head + pool.free_count) % pool.capacity
+    pool = pool._replace(
+        free_ring=pool.free_ring.at[tail].set(offset.astype(jnp.int32)),
+        free_count=pool.free_count + 1,
+    )
+    if reset_fill is not None:
+        pool = pool._replace(
+            pages=pool.pages.at[offset].set(
+                jnp.full(pool.page_shape, reset_fill, pool.pages.dtype)))
+    return pool
+
+
+def pool_read(pool: PagePool, offset: jax.Array) -> jax.Array:
+    return pool.pages[offset]
+
+
+def pool_write(pool: PagePool, offset: jax.Array, page: jax.Array) -> PagePool:
+    return pool._replace(pages=pool.pages.at[offset].set(page))
+
+
+def pool_used_pages(pool: PagePool) -> jax.Array:
+    """Number of live pages (handed out and not freed)."""
+    return pool.size - pool.free_count
+
+
+# ---------------------------------------------------------------------------
+# Shortcut composition: the page-table remap analogue.
+# ---------------------------------------------------------------------------
+
+def compose(pool_pages: jax.Array, directory: jax.Array) -> jax.Array:
+    """Materialize the composed view ``view[i] = pool_pages[directory[i]]``.
+
+    This is the *create request* replay: one gather that plays the role of the
+    ``mmap`` loop in the paper's step (2).  It is deliberately expensive
+    (O(slots x page_slots) bytes moved, vs O(slots x 8B) for pointer stores)
+    -- the two-orders-of-magnitude creation cost of Table 1 transfers
+    directly, and is likewise hidden asynchronously by the caller.
+    """
+    return jnp.take(pool_pages, directory, axis=0)
+
+
+def remap_slots(view: jax.Array, pool_pages: jax.Array,
+                slots: jax.Array, offsets: jax.Array) -> jax.Array:
+    """Replay *update requests*: ``view[slots[j]] = pool_pages[offsets[j]]``.
+
+    The paper's per-slot ``mmap(MAP_SHARED|MAP_FIXED)``.  ``slots`` and
+    ``offsets`` are parallel 1-D arrays; duplicate slots resolve to the last
+    write (matching sequential mmap calls).
+    """
+    return view.at[slots].set(jnp.take(pool_pages, offsets, axis=0))
+
+
+@functools.partial(jax.jit, static_argnames=("length",))
+def remap_range(view: jax.Array, pool_pages: jax.Array,
+                start: jax.Array, length: int,
+                offset: jax.Array) -> jax.Array:
+    """Remap ``length`` *contiguous* view slots to the same pool page.
+
+    The paper coalesces neighboring remaps into a single ``mmap`` call; a
+    contiguous directory range pointing at one bucket is exactly the fan-in>1
+    situation in extendible hashing.  ``length`` is static (powers of two in
+    EH), so this lowers to one dynamic_update_slice.
+    """
+    page = pool_pages[offset]
+    block = jnp.broadcast_to(page, (length,) + page.shape)
+    return jax.lax.dynamic_update_slice(
+        view, block, (start,) + (0,) * page.ndim)

@@ -1,0 +1,2 @@
+from repro.data.pipeline import (  # noqa: F401
+    DataConfig, SyntheticLM, make_batch_specs)

@@ -1,0 +1,2 @@
+from repro.distributed.sharding import (  # noqa: F401
+    batch_spec, logical_spec, param_specs, shardings_for, ShardingRules)

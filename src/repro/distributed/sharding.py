@@ -1,0 +1,253 @@
+"""Divisibility-aware logical-axis sharding rules.
+
+Every array in the system carries *logical* dimension names; this module maps
+them onto physical mesh axes.  The mapping is **divisibility-aware**: each
+logical name lists candidate mesh axes (or axis tuples) in priority order and
+the first candidate whose size divides the dimension — and whose axes are not
+already consumed by another dimension of the same array — wins.  Dims with no
+viable candidate are replicated instead of failing to compile, which is what
+lets every (arch x shape x mesh) cell lower even when e.g. ``kv_heads=8``
+meets a 16-way model axis or ``num_experts=60`` meets a 16-way data axis.
+
+Default logical -> physical intent (production mesh ``(pod, data, model)``):
+
+  batch       -> (pod, data)      pure DP (pod x data combined)
+  vocab/ff/heads/expert -> model  tensor parallelism (Megatron-style)
+  embed       -> data             FSDP: weights sharded over the DP axis and
+                                  all-gathered on use (ZeRO-3 via GSPMD)
+  ctx         -> model            decode-time context/sequence parallelism
+                                  (used when kv_heads cannot use `model`)
+
+``param_specs`` walks a parameter pytree and assigns logical names from the
+key path, so sharding stays centralized here rather than scattered through
+model code.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Optional, Sequence, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[str, tuple]
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    """Logical-name -> candidate physical axes (priority ordered)."""
+
+    rules: dict = field(default_factory=dict)
+
+    def candidates(self, name: Optional[str]) -> Sequence[Axis]:
+        if name is None:
+            return ()
+        return self.rules.get(name, ())
+
+
+def default_rules(mesh: Mesh) -> ShardingRules:
+    """The production ruleset; adapts to whether a 'pod' axis exists."""
+    dp: tuple = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    return ShardingRules(rules={
+        # data dims
+        "batch": (dp, ("data",)),
+        "seq": (),                       # train seq stays unsharded
+        "ctx": (("model",), ("data",)),  # decode context (SP fallback)
+        # weight dims
+        "vocab": (("model",),),
+        "embed": (("data",),),           # FSDP axis
+        "heads": (("model",),),
+        "kv_heads": (("model",),),
+        "ff": (("model",),),
+        "expert": (("model",), ("data",)),
+        "ssm_inner": (("model",),),
+        "ssm_heads": (("model",),),
+        # serving dims
+        "kv_seqs": (dp, ("data",)),      # sequences in the KV pool
+        "blocks": (dp, ("data",)),       # physical KV blocks
+        "head_dim": (("model",),),       # last-resort pool sharding
+        # generic replicated
+        "layer": (),
+    })
+
+
+def _axis_size(mesh: Mesh, axis: Axis) -> int:
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def _axis_names(axis: Axis) -> tuple:
+    return axis if isinstance(axis, tuple) else (axis,)
+
+
+#: dims with higher priority claim physical axes first (lower = earlier).
+#: ``ctx`` is the decode sequence-parallel *fallback* — it must not steal the
+#: model axis from a divisible kv_heads/heads dim.
+_NAME_PRIORITY = {"ctx": 5, "head_dim": 9}
+
+
+def logical_spec(shape: Sequence[int], names: Sequence[Optional[str]],
+                 mesh: Mesh, rules: Optional[ShardingRules] = None) -> P:
+    """Resolve logical dim names to a PartitionSpec for ``mesh``.
+
+    Greedy in name-priority order (TP dims before SP fallbacks); each
+    physical axis is consumed at most once per array; a dim whose candidates
+    all fail divisibility is replicated.
+    """
+    rules = rules or default_rules(mesh)
+    assert len(shape) == len(names), (shape, names)
+    used: set = set()
+    entries: list = [None] * len(shape)
+    order = sorted(range(len(shape)),
+                   key=lambda i: (_NAME_PRIORITY.get(names[i], 0), i))
+    for i in order:
+        dim, name = shape[i], names[i]
+        for cand in rules.candidates(name):
+            ax = _axis_names(cand)
+            if any(a not in mesh.axis_names for a in ax):
+                continue
+            if any(a in used for a in ax):
+                continue
+            if dim == 0 or dim % _axis_size(mesh, cand) != 0:
+                continue
+            entries[i] = cand if isinstance(cand, tuple) and len(cand) > 1 \
+                else ax[0]
+            used.update(ax)
+            break
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def shardings_for(tree, names_tree, mesh: Mesh,
+                  rules: Optional[ShardingRules] = None):
+    """Map a pytree of arrays/ShapeDtypeStructs + parallel names pytree to
+    NamedShardings."""
+    return jax.tree.map(
+        lambda x, names: NamedSharding(
+            mesh, logical_spec(x.shape, names, mesh, rules)),
+        tree, names_tree, is_leaf=lambda x: isinstance(x, (list, tuple)))
+
+
+# ---------------------------------------------------------------------------
+# Path-based parameter naming.
+# ---------------------------------------------------------------------------
+
+# (path regex, logical names for the *trailing* dims; a leading stacked layer
+#  dim is auto-prefixed with "layer"). First match wins.
+_PARAM_NAME_RULES: list[tuple[str, tuple]] = [
+    (r"embed$", ("vocab", "embed")),
+    (r"lm_head$", ("embed", "vocab")),
+    (r"attn/wq$", ("embed", "heads")),
+    (r"attn/wk$", ("embed", "kv_heads")),
+    (r"attn/wv$", ("embed", "kv_heads")),
+    (r"attn/wo$", ("heads", "embed")),
+    (r"attn/(q_norm|k_norm)$", (None,)),
+    (r"mlp/wi$", ("embed", "ff")),
+    (r"mlp/wo$", ("ff", "embed")),
+    (r"moe/router$", ("embed", "expert")),
+    (r"moe/wi$", ("expert", "embed", "ff")),
+    (r"moe/wo$", ("expert", "ff", "embed")),
+    (r"moe/shared/wi$", ("embed", "ff")),
+    (r"moe/shared/wo$", ("ff", "embed")),
+    (r"ssm/in_proj$", ("embed", "ssm_inner")),
+    (r"ssm/out_proj$", ("ssm_inner", "embed")),
+    (r"ssm/conv_w$", (None, "ssm_inner")),
+    (r"ssm/conv_b$", ("ssm_inner",)),
+    (r"ssm/(A_log|D|dt_bias)$", ("ssm_heads",)),
+    (r"ssm/norm$", ("ssm_inner",)),
+    (r"(ln1|ln2|final_norm|norm)$", (None,)),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            parts.append(p.name)
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_names(params) -> "jax.tree_util.PyTreeDef":
+    """Pytree of logical-name tuples parallel to ``params``."""
+    def name_leaf(path, leaf):
+        s = _path_str(path)
+        stacked = s.startswith("layers/")
+        for pat, names in _PARAM_NAME_RULES:
+            if re.search(pat, s):
+                full = (("layer",) if stacked else ()) + names
+                if len(full) == leaf.ndim:
+                    return list(full)
+                if len(full) < leaf.ndim:  # e.g. scalars broadcast
+                    return list(full) + [None] * (leaf.ndim - len(full))
+                return list(full[:leaf.ndim])
+        return [None] * leaf.ndim
+
+    return jax.tree_util.tree_map_with_path(name_leaf, params)
+
+
+def param_specs(params, mesh: Mesh,
+                rules: Optional[ShardingRules] = None):
+    """NamedSharding pytree for a parameter pytree (or ShapeDtypeStructs)."""
+    names = param_names(params)
+    return jax.tree.map(
+        lambda x, n: NamedSharding(mesh, logical_spec(x.shape, n, mesh,
+                                                      rules)),
+        params, names, is_leaf=lambda x: hasattr(x, "shape"))
+
+
+def batch_spec(batch, mesh: Mesh, rules: Optional[ShardingRules] = None):
+    """Shard every batch leaf on its leading (batch) dim only."""
+    def spec(x):
+        names = ["batch"] + [None] * (x.ndim - 1)
+        return NamedSharding(mesh, logical_spec(x.shape, names, mesh, rules))
+    return jax.tree.map(spec, batch)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# In-model sharding hints (active-mesh context).
+#
+# Model code cannot know the mesh, but a few intermediates (chunked-loss
+# logits, MoE dispatch buffers) MUST be pinned or GSPMD reshards them to
+# something catastrophic (e.g. gathering full-vocab logits per device).  The
+# launcher activates a mesh; ``constrain`` is a no-op outside that context,
+# so tests and single-device runs are untouched.
+# ---------------------------------------------------------------------------
+
+import contextlib
+import threading
+
+_ACTIVE = threading.local()
+
+
+@contextlib.contextmanager
+def activate_mesh(mesh: Mesh, rules: Optional[ShardingRules] = None):
+    prev = getattr(_ACTIVE, "mesh", None), getattr(_ACTIVE, "rules", None)
+    _ACTIVE.mesh, _ACTIVE.rules = mesh, rules
+    try:
+        yield
+    finally:
+        _ACTIVE.mesh, _ACTIVE.rules = prev
+
+
+def constrain(x: jax.Array, names: Sequence[Optional[str]]) -> jax.Array:
+    """Pin ``x`` to the logical spec under the active mesh (no-op if none)."""
+    mesh = getattr(_ACTIVE, "mesh", None)
+    if mesh is None:
+        return x
+    rules = getattr(_ACTIVE, "rules", None)
+    spec = logical_spec(x.shape, names, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

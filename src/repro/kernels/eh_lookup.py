@@ -1,0 +1,130 @@
+"""Fused extendible-hashing lookup kernels — the paper's hot loop on TPU.
+
+Two access paths, mirroring §2 of the paper:
+
+  * :func:`eh_lookup`      — the *traditional* path: hash -> directory
+    gather -> bucket gather -> probe.  Two data-dependent indirections.
+  * :func:`shortcut_lookup`— the *shortcut* path: hash -> direct view
+    probe.  One indirection: the composed view (``rewiring.compose``) plays
+    the role of the page table having pre-resolved the mapping.
+
+TPU adaptation notes (DESIGN.md §2): the VPU has no scatter/gather to HBM,
+so both kernels keep the directory and bucket pages VMEM-resident (block =
+the full structure; for the assigned sizes — 2^14 slots x 64-slot buckets
+of u32 pairs — this is ~8 MiB, within VMEM).  Per key-tile the kernel
+computes the multiplicative hashes vectorized on the VPU, then resolves
+the data-dependent row reads with a ``fori_loop`` of dynamic slices
+(sublane-dynamic addressing, which Mosaic supports on VMEM).  The probe
+itself is vectorized across the bucket row.  Directories larger than VMEM
+are exactly the regime where the paper's lesson applies: don't chase
+pointers — compose the view first (``shortcut_lookup``) or fall back to
+the XLA gather path (``core.extendible_hashing``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# python ints (NOT jnp scalars: a traced module-level constant would be
+# captured by the kernel, which pallas forbids); cast at use sites
+EMPTY_KEY = 0xFFFFFFFF
+MISS = 0xFFFFFFFF
+_C1 = 2654435761
+_C2 = 0x9E3779B1
+
+
+def _probe_row(row_k, row_v, key, slots: int):
+    """Vectorized linear probe of one bucket row (slots,)->value or MISS."""
+    kk = key.astype(jnp.uint32) * jnp.uint32(_C2)
+    start = (kk ^ (kk >> jnp.uint32(16))) % jnp.uint32(slots)
+    pos = ((start + jnp.arange(slots, dtype=jnp.uint32))
+           % jnp.uint32(slots)).astype(jnp.int32)
+    probed = row_k[pos]
+    hit = probed == key
+    empties = probed == jnp.uint32(EMPTY_KEY)
+    before = jnp.cumsum(empties.astype(jnp.int32)) \
+        - empties.astype(jnp.int32)
+    live = hit & (before == 0)
+    found = jnp.any(live)
+    return jnp.where(found, row_v[pos[jnp.argmax(live)]],
+                     jnp.uint32(MISS))
+
+
+def _lookup_kernel(gd_ref, keys_ref, dir_ref, bk_ref, bv_ref, out_ref, *,
+                   tile: int, slots: int, two_level: bool):
+    g = gd_ref[0]
+    keys = keys_ref[...]
+    h = keys * jnp.uint32(_C1)
+    slot = jnp.where(
+        g == 0, jnp.uint32(0),
+        h >> (jnp.uint32(32) - g.astype(jnp.uint32))).astype(jnp.int32)
+
+    def body(i, _):
+        key = keys[i]
+        s = slot[i]
+        if two_level:
+            row = dir_ref[s]            # indirection 1: directory
+        else:
+            row = s                     # shortcut: slot IS the row
+        row_k = bk_ref[row]             # indirection 2 (or 1): bucket page
+        row_v = bv_ref[row]
+        out_ref[i] = _probe_row(row_k, row_v, key, slots)
+        return 0
+
+    jax.lax.fori_loop(0, tile, body, 0)
+
+
+def _run(keys, directory, bucket_keys, bucket_vals, global_depth, *,
+         two_level: bool, tile: int, interpret: bool):
+    n = keys.shape[0]
+    pad = (-n) % tile
+    if pad:
+        keys = jnp.pad(keys, (0, pad))
+    nt = (n + pad) // tile
+    D = directory.shape[0]
+    C, S = bucket_keys.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,          # global depth in SMEM
+        grid=(nt,),
+        in_specs=[
+            pl.BlockSpec((tile,), lambda i, gd: (i,)),
+            pl.BlockSpec((D,), lambda i, gd: (0,)),       # VMEM-resident
+            pl.BlockSpec((C, S), lambda i, gd: (0, 0)),
+            pl.BlockSpec((C, S), lambda i, gd: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i, gd: (i,)),
+    )
+    kernel = functools.partial(_lookup_kernel, tile=tile, slots=S,
+                               two_level=two_level)
+    out = pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n + pad,), jnp.uint32),
+        interpret=interpret,
+    )(jnp.asarray([global_depth], jnp.int32), keys.astype(jnp.uint32),
+      directory.astype(jnp.int32), bucket_keys, bucket_vals)
+    return out[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def eh_lookup(keys, directory, bucket_keys, bucket_vals, global_depth, *,
+              tile: int = 256, interpret: bool = True):
+    """Traditional EH lookup: keys (N,) -> values (N,) (MISS on absent).
+
+    directory: (D,) int32; bucket_keys/vals: (C, S) uint32."""
+    return _run(keys, directory, bucket_keys, bucket_vals, global_depth,
+                two_level=True, tile=tile, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def shortcut_lookup(keys, view_keys, view_vals, global_depth, *,
+                    tile: int = 256, interpret: bool = True):
+    """Shortcut lookup over the composed view: one indirection fewer.
+
+    view_keys/vals: (2^g_cap, S) — slot-indexed bucket pages."""
+    dummy_dir = jnp.zeros((1,), jnp.int32)  # unused in shortcut mode
+    return _run(keys, dummy_dir, view_keys, view_vals, global_depth,
+                two_level=False, tile=tile, interpret=interpret)

@@ -1,0 +1,142 @@
+"""Flash attention (train/prefill) as a Pallas TPU kernel.
+
+Tiling: grid = (B, KV, n_q, n_kv) with the kv axis innermost ("arbitrary"
+semantics — it carries the online-softmax recurrence in VMEM scratch).
+Per step the kernel holds one q tile (G, bq, hd), one k/v tile (bkv, hd)
+and the f32 accumulator (G, bq, hd) in VMEM; with the defaults
+(bq=256, bkv=512, hd<=256, G<=8) the working set stays well under 16 MiB
+and every matmul dimension is a multiple of the 128-lane MXU width.
+
+Causal masking is structural: kv tiles strictly above the diagonal are
+skipped with ``pl.when`` (no wasted MXU work), the diagonal tile applies
+the triangular mask, sliding windows additionally mask from below.
+
+GQA is handled by folding the G query heads of one kv head into the q
+tile's leading dim — the kv tile is loaded ONCE per group (the bandwidth
+win GQA exists for).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  bq: int, bkv: int, n_kv: int, causal: bool,
+                  window: Optional[int], softcap: Optional[float],
+                  q_offset: int, scale: float, skv: int):
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_lo = qi * bq + q_offset           # global position of q tile start
+    k_lo = kj * bkv
+    # structural skip: whole kv tile above the causal diagonal, or whole
+    # tile below the window
+    in_range = True
+    if causal:
+        in_range = k_lo <= q_lo + bq - 1
+    if window is not None:
+        in_range = jnp.logical_and(in_range,
+                                   k_lo + bkv - 1 > q_lo - window)
+
+    @pl.when(in_range)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32) * scale    # (G, bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)            # (bkv, hd)
+        v = v_ref[0, 0].astype(jnp.float32)            # (bkv, hd)
+        s = jax.lax.dot_general(
+            q, k, (((2,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)        # (G, bq, bkv)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+        mask = kpos < skv          # padded kv tail is never attended
+        if causal:
+            mask &= qpos >= kpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask[None], s, _NEG_INF)
+        m_prev = m_ref[...]                             # (G, bq)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+        pv = jax.lax.dot_general(
+            p, v, (((2,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)         # (G, bq, hd)
+        acc_ref[...] = acc_ref[...] * corr[..., None] + pv
+        m_ref[...] = m_new
+
+    @pl.when(kj == n_kv - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[..., None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "softcap", "bq", "bkv",
+                              "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    bq: int = 256, bkv: int = 512,
+                    interpret: bool = True) -> jax.Array:
+    """q: (B, KV, G, Sq, hd); k/v: (B, KV, Skv, hd) -> like q.
+
+    Sq/Skv are padded to tile multiples internally; q positions are
+    right-aligned against Skv (prefill convention)."""
+    B, KV, G, Sq, hd = q.shape
+    Skv = k.shape[2]
+    bq = min(bq, Sq)
+    bkv = min(bkv, Skv)
+    pad_q = (-Sq) % bq
+    pad_kv = (-Skv) % bkv
+    q_offset = Skv - Sq                 # right alignment
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_kv:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_kv), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_kv), (0, 0)))
+    n_q = (Sq + pad_q) // bq
+    n_kv = (Skv + pad_kv) // bkv
+    kernel = functools.partial(
+        _flash_kernel, bq=bq, bkv=bkv, n_kv=n_kv, causal=causal,
+        window=window, softcap=softcap, q_offset=q_offset,
+        scale=hd ** -0.5, skv=Skv)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, KV, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, bq, hd),
+                         lambda b, h, i, j: (b, h, 0, i, 0)),
+            pl.BlockSpec((1, 1, bkv, hd),
+                         lambda b, h, i, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, bkv, hd),
+                         lambda b, h, i, j: (b, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, bq, hd),
+                               lambda b, h, i, j: (b, h, 0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(
+            (B, KV, G, Sq + pad_q, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, bq), jnp.float32),
+            pltpu.VMEM((G, bq), jnp.float32),
+            pltpu.VMEM((G, bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :, :Sq]

@@ -1,0 +1,115 @@
+"""Decode attention through the block-table indirection — the
+"traditional directory" access path, as a Pallas TPU kernel.
+
+The block table plays the paper's pointer directory: each kv tile's HBM
+address is *data-dependent*.  On TPU the idiomatic mechanism is scalar
+prefetch: the (B, MB) block table rides in SMEM and the k/v BlockSpec
+``index_map`` dereferences it, so the DMA engine chases the indirection
+one step ahead of compute (the hardware page-walk analogue).  Dead table
+entries (-1) are clamped in the index_map and masked off via ``seq_lens``.
+
+Grid: (B, KV, MB), MB innermost carrying the online-softmax recurrence.
+Compare with ``shortcut_attention.py``: identical math, but every tile
+fetch costs an SMEM table load + an unpredictable HBM address — the
+two-indirection cost the shortcut view removes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _kernel(tables_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, bs: int, mb: int,
+            softcap: Optional[float], scale: float):
+    b = pl.program_id(0)
+    mj = pl.program_id(2)
+    ctx = lens_ref[b]
+
+    @pl.when(mj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    lo = mj * bs                       # logical position of this block
+    live = jnp.logical_and(tables_ref[b, mj] >= 0, lo < ctx)
+
+    @pl.when(live)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32) * scale      # (G, hd)
+        k = k_ref[0, 0].astype(jnp.float32)              # (bs, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)           # (G, bs)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        pos = lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(pos < ctx, s, _NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+        acc_ref[...] = acc_ref[...] * corr[..., None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(mj == mb - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[..., None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("softcap", "interpret"))
+def paged_attention(q, k_pool, v_pool, block_tables, seq_lens, *,
+                    softcap: Optional[float] = None,
+                    interpret: bool = True) -> jax.Array:
+    """q: (B, KV, G, hd); pools: (nblocks, KV, bs, hd);
+    block_tables: (B, MB) int32 (-1 unset); seq_lens: (B,) int32.
+    Returns (B, KV, G, hd)."""
+    B, KV, G, hd = q.shape
+    nblocks, _, bs, _ = k_pool.shape
+    MB = block_tables.shape[1]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,        # block table + seq lens in SMEM
+        grid=(B, KV, MB),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd),
+                         lambda b, h, m, tbl, ln: (b, h, 0, 0)),
+            # the indirection: tile address comes from the table
+            # (-1 entries clamp to block 0; the kernel masks them off)
+            pl.BlockSpec((1, 1, bs, hd),
+                         lambda b, h, m, tbl, ln: (
+                             jnp.maximum(tbl[b, m], 0), h, 0, 0)),
+            pl.BlockSpec((1, 1, bs, hd),
+                         lambda b, h, m, tbl, ln: (
+                             jnp.maximum(tbl[b, m], 0), h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd),
+                               lambda b, h, m, tbl, ln: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(
+        _kernel, bs=bs, mb=MB, softcap=softcap, scale=hd ** -0.5)
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), seq_lens.astype(jnp.int32),
+      q, k_pool, v_pool)

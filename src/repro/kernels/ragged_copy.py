@@ -1,0 +1,55 @@
+"""Ragged row copy: the maintenance kernel (the ``mmap`` replay loop).
+
+``view[slots[i]] = pool[offsets[i]]`` for i in [0, M): both source and
+destination rows are data-dependent.  On TPU this is pure scalar-prefetch
+territory — ``offsets`` addresses the *input* BlockSpec, ``slots``
+addresses the *output* BlockSpec, and the grid walks the request list
+while the DMA engine double-buffers rows.  The destination view is passed
+as a donated input aliased to the output (``input_output_aliases``), so
+un-touched rows never move: the kernel's byte cost is
+``2 x M x row_bytes``, the same economics as the paper's per-slot remap
+(and like ``mmap``, later duplicates win — the grid is sequential).
+
+This is the device half of the Shortcut-EH / Shortcut-KV *update request*
+replay; ``core.rewiring.remap_slots`` is its XLA fallback.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _copy_kernel(slots_ref, offsets_ref, pool_ref, view_ref, out_ref):
+    del slots_ref, offsets_ref, view_ref
+    out_ref[...] = pool_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ragged_copy(view, pool, slots, offsets, *,
+                interpret: bool = True) -> jax.Array:
+    """view: (V, row); pool: (P, row); slots/offsets: (M,) int32.
+    Returns the updated view (aliased in-place on TPU)."""
+    M = slots.shape[0]
+    row = view.shape[1:]
+    assert pool.shape[1:] == row, (pool.shape, view.shape)
+    blk = (1,) + row
+    zeros = (0,) * len(row)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,        # slots + offsets in SMEM
+        grid=(M,),
+        in_specs=[
+            pl.BlockSpec(blk, lambda i, sl, of: (of[i],) + zeros),  # pool
+            pl.BlockSpec(blk, lambda i, sl, of: (sl[i],) + zeros),  # view
+        ],
+        out_specs=pl.BlockSpec(blk, lambda i, sl, of: (sl[i],) + zeros),
+    )
+    return pl.pallas_call(
+        _copy_kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(view.shape, view.dtype),
+        input_output_aliases={3: 0},  # args: slots, offsets, pool, view
+        interpret=interpret,
+    )(slots.astype(jnp.int32), offsets.astype(jnp.int32), pool, view)

@@ -1,0 +1,116 @@
+"""Decode attention over the *contiguous shortcut view* — the "after" of
+the paper's before/after.
+
+The view is (B, KV, S_cap, hd): token positions are pure address
+arithmetic, so the kernel is a straight stream of kv tiles into VMEM with
+the online-softmax recurrence in scratch — zero index traffic.  ``ctx_len``
+arrives via scalar prefetch and masks the dead tail; tiles entirely beyond
+``ctx_len`` are skipped structurally (``pl.when``), so the DMA schedule
+shortens with the live context exactly like the paper's shortcut lookup
+touches only mapped pages.
+
+Grid: (B, KV, n_s), s innermost carrying the recurrence.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            bs: int, n_s: int, window: Optional[int],
+            softcap: Optional[float], scale: float):
+    b = pl.program_id(0)
+    sj = pl.program_id(2)
+    ctx = len_ref[b]
+
+    @pl.when(sj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    lo = sj * bs
+    live_tile = lo < ctx
+    if window is not None:
+        live_tile = jnp.logical_and(live_tile,
+                                    lo + bs - 1 > ctx - 1 - window)
+
+    @pl.when(live_tile)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32) * scale     # (G, hd)
+        k = k_ref[0, 0].astype(jnp.float32)             # (bs, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)          # (G, bs)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        pos = lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = pos < ctx
+        if window is not None:
+            mask &= pos > ctx - 1 - window
+        s = jnp.where(mask, s, _NEG_INF)
+        m_prev = m_ref[...]                              # (G,)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+        acc_ref[...] = acc_ref[...] * corr[..., None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)          # (G, hd)
+        m_ref[...] = m_new
+
+    @pl.when(sj == n_s - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[..., None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "softcap", "bs", "interpret"))
+def shortcut_attention(q, k_view, v_view, ctx_len, *,
+                       window: Optional[int] = None,
+                       softcap: Optional[float] = None,
+                       bs: int = 512, interpret: bool = True) -> jax.Array:
+    """q: (B, KV, G, hd); k_view/v_view: (B, KV, S_cap, hd);
+    ctx_len: (B,) int32 live tokens.  Returns (B, KV, G, hd)."""
+    B, KV, G, hd = q.shape
+    S = k_view.shape[2]
+    bs = min(bs, S)
+    pad = (-S) % bs
+    if pad:
+        k_view = jnp.pad(k_view, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v_view = jnp.pad(v_view, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    n_s = (S + pad) // bs
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, KV, n_s),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, j, ln: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bs, hd), lambda b, h, j, ln: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, bs, hd), lambda b, h, j, ln: (b, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd),
+                               lambda b, h, j, ln: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(
+        _kernel, bs=bs, n_s=n_s, window=window, softcap=softcap,
+        scale=hd ** -0.5)
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        interpret=interpret,
+    )(ctx_len.astype(jnp.int32), q, k_view, v_view)

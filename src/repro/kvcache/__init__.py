@@ -1,0 +1,5 @@
+from repro.kvcache.paged_cache import (PagedKVCache, append_tokens,  # noqa
+                                       cache_create, gather_context,
+                                       fragmentation, release_seqs,
+                                       write_prefill)
+from repro.kvcache.shortcut_cache import ShortcutKVManager  # noqa: F401

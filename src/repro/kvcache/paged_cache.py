@@ -1,0 +1,170 @@
+"""Paged KV cache: the serving-layer "traditional directory".
+
+Mapping onto the paper (DESIGN.md §3):
+
+  paper                         here
+  -----                         ----
+  physical page pool            (L, num_blocks, block, KV, hd) HBM pools
+  traditional inner node        per-sequence block table (logical->physical)
+  pointer dereference           block-table gather in :func:`gather_context`
+  pool free-offset queue        ring-buffer allocator (same as rewiring.py)
+
+All ops are functional and jittable; the async shortcut view lives in
+``shortcut_cache.py``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class PagedKVCache(NamedTuple):
+    k_pool: jax.Array        # (L, num_blocks, block_size, KV, hd)
+    v_pool: jax.Array        # (L, num_blocks, block_size, KV, hd)
+    block_tables: jax.Array  # (max_seqs, max_blocks_per_seq) int32, -1 unset
+    seq_lens: jax.Array      # (max_seqs,) int32 tokens stored
+    free_ring: jax.Array     # (num_blocks,) int32 free physical block ids
+    free_head: jax.Array     # () int32
+    free_count: jax.Array    # () int32
+
+    @property
+    def num_layers(self) -> int:
+        return self.k_pool.shape[0]
+
+    @property
+    def num_blocks(self) -> int:
+        return self.k_pool.shape[1]
+
+    @property
+    def block_size(self) -> int:
+        return self.k_pool.shape[2]
+
+    @property
+    def max_blocks_per_seq(self) -> int:
+        return self.block_tables.shape[1]
+
+
+def cache_create(num_layers: int, num_blocks: int, block_size: int,
+                 kv_heads: int, head_dim: int, max_seqs: int,
+                 max_blocks_per_seq: int, dtype=jnp.bfloat16) -> PagedKVCache:
+    return PagedKVCache(
+        k_pool=jnp.zeros((num_layers, num_blocks, block_size, kv_heads,
+                          head_dim), dtype),
+        v_pool=jnp.zeros((num_layers, num_blocks, block_size, kv_heads,
+                          head_dim), dtype),
+        block_tables=jnp.full((max_seqs, max_blocks_per_seq), -1, jnp.int32),
+        seq_lens=jnp.zeros((max_seqs,), jnp.int32),
+        free_ring=jnp.arange(num_blocks, dtype=jnp.int32),
+        free_head=jnp.zeros((), jnp.int32),
+        free_count=jnp.full((), num_blocks, jnp.int32),
+    )
+
+
+def _alloc_blocks(cache: PagedKVCache, need: jax.Array):
+    """Vectorized pop of blocks for sequences with need[i]=True.
+
+    Returns (cache, block_ids (B,)) with -1 where not needed/exhausted."""
+    B = need.shape[0]
+    rank = jnp.cumsum(need.astype(jnp.int32)) - need.astype(jnp.int32)
+    total = need.sum()
+    ring_pos = (cache.free_head + rank) % cache.num_blocks
+    ids = jnp.where(need & (rank < cache.free_count),
+                    cache.free_ring[ring_pos], -1)
+    granted = (ids >= 0).sum()
+    cache = cache._replace(
+        free_head=(cache.free_head + granted) % cache.num_blocks,
+        free_count=cache.free_count - granted)
+    return cache, ids
+
+
+@jax.jit
+def append_tokens(cache: PagedKVCache, seq_ids: jax.Array,
+                  new_k: jax.Array, new_v: jax.Array) -> PagedKVCache:
+    """Append one token per active sequence (the synchronous, authoritative
+    update — the paper's traditional-directory modification).
+
+    seq_ids: (B,) int32; new_k/new_v: (L, B, KV, hd).
+    """
+    bs = cache.block_size
+    pos = cache.seq_lens[seq_ids]                   # (B,)
+    block_idx = pos // bs
+    slot = pos % bs
+    need_new = slot == 0
+    cache, fresh = _alloc_blocks(cache, need_new)
+    tables = cache.block_tables.at[seq_ids, block_idx].set(
+        jnp.where(need_new, fresh, cache.block_tables[seq_ids, block_idx]))
+    phys = tables[seq_ids, block_idx]               # (B,)
+    k_pool = cache.k_pool.at[:, phys, slot].set(new_k)
+    v_pool = cache.v_pool.at[:, phys, slot].set(new_v)
+    return cache._replace(
+        k_pool=k_pool, v_pool=v_pool, block_tables=tables,
+        seq_lens=cache.seq_lens.at[seq_ids].add(1))
+
+
+@jax.jit
+def write_prefill(cache: PagedKVCache, seq_ids: jax.Array,
+                  k: jax.Array, v: jax.Array) -> PagedKVCache:
+    """Bulk-write a prefill: k/v (L, B, S, KV, hd), S divisible by block."""
+    L, B, S = k.shape[:3]
+    bs = cache.block_size
+    nb = S // bs
+    need = jnp.ones((B * nb,), jnp.bool_)
+    cache, fresh = _alloc_blocks(cache, need)
+    fresh = fresh.reshape(B, nb)
+    tables = cache.block_tables.at[seq_ids[:, None],
+                                   jnp.arange(nb)[None]].set(fresh)
+    kb = k.reshape(L, B, nb, bs, k.shape[3], k.shape[4])
+    vb = v.reshape(L, B, nb, bs, v.shape[3], v.shape[4])
+    k_pool = cache.k_pool.at[:, fresh].set(kb)
+    v_pool = cache.v_pool.at[:, fresh].set(vb)
+    return cache._replace(
+        k_pool=k_pool, v_pool=v_pool, block_tables=tables,
+        seq_lens=cache.seq_lens.at[seq_ids].set(S))
+
+
+@jax.jit
+def release_seqs(cache: PagedKVCache, seq_ids: jax.Array) -> PagedKVCache:
+    """Return all blocks of the given sequences to the free ring."""
+    rows = cache.block_tables[seq_ids]              # (B, MB)
+    live = rows >= 0
+    flat = rows.reshape(-1)
+    flive = live.reshape(-1)
+    rank = jnp.cumsum(flive.astype(jnp.int32)) - flive.astype(jnp.int32)
+    tail = (cache.free_head + cache.free_count + rank) % cache.num_blocks
+    ring = cache.free_ring.at[jnp.where(flive, tail, cache.num_blocks)].set(
+        flat, mode="drop")
+    return cache._replace(
+        free_ring=ring,
+        free_count=cache.free_count + flive.sum(),
+        block_tables=cache.block_tables.at[seq_ids].set(-1),
+        seq_lens=cache.seq_lens.at[seq_ids].set(0))
+
+
+@jax.jit
+def gather_context(cache: PagedKVCache, seq_ids: jax.Array):
+    """The *traditional* access path: two dependent indirections —
+    block-table load, then physical-block gather.
+
+    Returns (k_ctx, v_ctx): (L, B, KV, max_blocks*block, hd)
+    (attention-native layout)."""
+    tables = cache.block_tables[seq_ids]            # (B, MB) indirection 1
+    safe = jnp.maximum(tables, 0)
+    k = cache.k_pool[:, safe]                       # indirection 2 (gather)
+    v = cache.v_pool[:, safe]
+    L, B, MB, bs, KV, hd = k.shape
+    return (k.transpose(0, 1, 4, 2, 3, 5).reshape(L, B, KV, MB * bs, hd),
+            v.transpose(0, 1, 4, 2, 3, 5).reshape(L, B, KV, MB * bs, hd))
+
+
+def fragmentation(cache: PagedKVCache, seq_ids: jax.Array) -> jax.Array:
+    """Routing statistic (the fan-in analogue, §3.2): fraction of
+    logically-adjacent block pairs that are physically non-adjacent."""
+    tables = cache.block_tables[seq_ids]
+    a, b = tables[:, :-1], tables[:, 1:]
+    live = (a >= 0) & (b >= 0)
+    non_adj = live & (b != a + 1)
+    return non_adj.sum().astype(jnp.float32) \
+        / jnp.maximum(live.sum(), 1).astype(jnp.float32)

@@ -1,0 +1,120 @@
+"""Prefix-cache index: the paper's EH index used AS the serving lookup
+structure (DESIGN.md §3) — completing the loop between the two layers.
+
+Prefix caching deduplicates KV blocks across requests that share a prompt
+prefix (system prompts, few-shot headers).  The lookup structure maps
+``hash(token-block content, parent-chain)`` -> physical KV block id: a
+dynamic hash index with exactly the paper's profile — unknown final size,
+lookup-heavy, bursty inserts when new prompts arrive — so it IS a
+Shortcut-EH: synchronous traditional directory, async shortcut directory,
+version gating, fan-in routing.
+
+Chain hashing: block i's key folds its content hash into the parent's
+key (a Merkle chain), so a hit at block i implies the whole prefix
+[0, i] matches — single probe per block, no token re-comparison.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.shortcut_eh import ShortcutEH
+
+_MISS = 0xFFFFFFFF
+_FNV_PRIME = np.uint64(1099511628211)
+_FNV_OFF = np.uint64(14695981039346656037)
+
+
+def _fnv1a(data: np.ndarray, seed: np.uint64) -> np.uint64:
+    h = seed if seed else _FNV_OFF
+    for b in np.asarray(data, np.uint64):
+        h = np.uint64((h ^ b) * _FNV_PRIME)
+    return h
+
+
+class PrefixCacheIndex:
+    """Maps token-block prefixes to physical KV blocks via Shortcut-EH."""
+
+    def __init__(self, block_size: int, *, max_global_depth: int = 16,
+                 bucket_slots: int = 64, capacity: int = 4096,
+                 async_mapper: bool = False):
+        self.block_size = block_size
+        self.index = ShortcutEH(
+            max_global_depth=max_global_depth, bucket_slots=bucket_slots,
+            capacity=capacity, async_mapper=async_mapper)
+        self.hits = 0
+        self.misses = 0
+
+    # -- key derivation ------------------------------------------------------
+
+    def chain_keys(self, tokens: Sequence[int]) -> np.ndarray:
+        """uint32 keys for each complete block of ``tokens`` (Merkle
+        chain: key_i commits to blocks [0, i])."""
+        toks = np.asarray(tokens, np.uint64)
+        n_blocks = len(toks) // self.block_size
+        keys = np.empty((n_blocks,), np.uint32)
+        h = np.uint64(0)
+        for i in range(n_blocks):
+            blk = toks[i * self.block_size:(i + 1) * self.block_size]
+            h = _fnv1a(blk, h)
+            # avoid the EMPTY/MISS sentinel
+            k = np.uint32(h & np.uint64(0xFFFFFFFF))
+            keys[i] = np.uint32(1) if k in (0, _MISS) else k
+        return keys
+
+    # -- serving API ---------------------------------------------------------
+
+    def match_prefix(self, tokens: Sequence[int]) -> tuple[int, list]:
+        """Longest cached prefix of ``tokens``.
+
+        Returns (num_cached_tokens, [physical block ids]) — the serving
+        layer copies/aliases these blocks instead of re-prefilling."""
+        keys = self.chain_keys(tokens)
+        if keys.size == 0:
+            return 0, []
+        vals = np.asarray(self.index.lookup(keys))
+        blocks: list = []
+        for v in vals:
+            if int(v) == _MISS:
+                break
+            blocks.append(int(v))
+        if blocks:
+            self.hits += 1
+        else:
+            self.misses += 1
+        return len(blocks) * self.block_size, blocks
+
+    def insert_prefix(self, tokens: Sequence[int],
+                      block_ids: Sequence[int]) -> int:
+        """Register the (complete) blocks of a finished prefill.
+
+        Returns the number of blocks registered.  Maintenance of the
+        shortcut directory is asynchronous as always (``pump()`` or the
+        mapper thread replays it)."""
+        keys = self.chain_keys(tokens)
+        n = min(len(keys), len(block_ids))
+        if n == 0:
+            return 0
+        self.index.insert(keys[:n], np.asarray(block_ids[:n], np.uint32))
+        return n
+
+    def pump(self):
+        self.index.pump()
+
+    def stats(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "in_sync": self.index.in_sync(),
+                "fan_in": self.index.avg_fan_in(),
+                "routed_shortcut": self.index.routed_shortcut,
+                "routed_traditional": self.index.routed_traditional}
+
+    def close(self):
+        self.index.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False

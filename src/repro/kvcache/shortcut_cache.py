@@ -1,0 +1,247 @@
+"""Shortcut KV view: the paper's technique applied to the serving layer.
+
+The paged cache reads through *two* indirections (block table, then block
+gather).  The shortcut view pre-composes that mapping into a contiguous
+per-sequence layout — ``view[l, s, t] = pool[l, table[s, t // bs], t % bs]``
+— so a decode step reads it with pure address arithmetic (a dynamic-slice),
+zero data-dependent indirections.  This is ``rewiring.compose`` at the KV
+granularity.
+
+Exactly like Shortcut-EH (§4.1): the paged cache stays authoritative and
+synchronous; the view is replayed asynchronously from a FIFO of *update*
+(append a token row) and *create* (re-linearize a sequence) requests, is
+eagerly populated before publication, version-gates every read, and a
+fragmentation statistic (the fan-in analogue) decides routing.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kvcache import paged_cache as pc
+
+
+# -- functional core -----------------------------------------------------------
+
+@jax.jit
+def compose_seq(cache: pc.PagedKVCache, view_k: jax.Array, view_v: jax.Array,
+                seq_id: jax.Array):
+    """Create-request replay: linearize one sequence into the view.
+
+    view_k/view_v: (L, max_seqs, S_cap, KV, hd)."""
+    table = jnp.maximum(cache.block_tables[seq_id], 0)    # (MB,)
+    L = cache.k_pool.shape[0]
+    bs = cache.block_size
+    MB = table.shape[0]
+    kv_shape = cache.k_pool.shape[3:]
+    k_lin = cache.k_pool[:, table].reshape((L, MB * bs) + kv_shape)
+    v_lin = cache.v_pool[:, table].reshape((L, MB * bs) + kv_shape)
+    cap = view_k.shape[2]
+    return (view_k.at[:, seq_id, :].set(k_lin[:, :cap]),
+            view_v.at[:, seq_id, :].set(v_lin[:, :cap]))
+
+
+@jax.jit
+def append_to_view(view_k: jax.Array, view_v: jax.Array, seq_ids: jax.Array,
+                   positions: jax.Array, new_k: jax.Array,
+                   new_v: jax.Array):
+    """Update-request replay: write one token row per sequence
+    (the per-slot ``mmap`` analogue).  new_k/new_v: (L, B, KV, hd)."""
+    return (view_k.at[:, seq_ids, positions].set(new_k),
+            view_v.at[:, seq_ids, positions].set(new_v))
+
+
+@jax.jit
+def slice_context(view_k: jax.Array, view_v: jax.Array, seq_ids: jax.Array):
+    """The shortcut access path: a gather on the *sequence* axis only —
+    token positions are pure address arithmetic (contiguous stream).
+    Returns (L, B, KV, S, hd) (attention-native layout)."""
+    return (view_k[:, seq_ids].transpose(0, 1, 3, 2, 4),
+            view_v[:, seq_ids].transpose(0, 1, 3, 2, 4))
+
+
+# -- host orchestration ----------------------------------------------------------
+
+@dataclass
+class _Request:
+    kind: str                      # "append" | "create"
+    versions: np.ndarray           # per-seq trad_version at request time
+    seq_ids: np.ndarray
+    positions: Optional[np.ndarray] = None
+    new_k: Optional[jax.Array] = None
+    new_v: Optional[jax.Array] = None
+
+
+class ShortcutKVManager:
+    """Maintains the shortcut view alongside an authoritative paged cache.
+
+    Per-sequence version numbers (the paper keeps one per directory; a
+    sequence is our directory unit): a read routes through the shortcut only
+    when every sequence in the batch is in sync *and* the batch
+    fragmentation exceeds ``frag_threshold`` (below it, the paged gather
+    streams nearly-contiguous blocks anyway, and maintenance would be pure
+    overhead — the TLB-thrashing lesson of §3.2 mapped to DMA terms).
+    """
+
+    def __init__(self, cache: pc.PagedKVCache, seq_capacity: int, *,
+                 frag_threshold: float = 0.25, poll_interval: float = 0.025,
+                 async_mapper: bool = False):
+        L, _, bs, KV, hd = cache.k_pool.shape
+        max_seqs = cache.block_tables.shape[0]
+        self.cache = cache
+        self.view_k = jnp.zeros((L, max_seqs, seq_capacity, KV, hd),
+                                cache.k_pool.dtype)
+        self.view_v = jnp.zeros_like(self.view_k)
+        self.frag_threshold = float(frag_threshold)
+        self.poll_interval = float(poll_interval)
+        self.trad_version = np.zeros((max_seqs,), np.int64)
+        self.sc_version = np.full((max_seqs,), -1, np.int64)
+        self.routed_shortcut = 0
+        self.routed_paged = 0
+        self._queue: "queue.SimpleQueue[_Request]" = queue.SimpleQueue()
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self._mapper: Optional[threading.Thread] = None
+        if async_mapper:
+            self._mapper = threading.Thread(
+                target=self._mapper_loop, daemon=True, name="kv-mapper")
+            self._mapper.start()
+
+    # -- main-thread (serving) API -----------------------------------------
+
+    def prefill(self, seq_ids: np.ndarray, k: jax.Array, v: jax.Array):
+        """Synchronous paged write + async create request per sequence."""
+        with self._lock:
+            self.cache = pc.write_prefill(
+                self.cache, jnp.asarray(seq_ids), k, v)
+            self.trad_version[seq_ids] += 1
+            vers = self.trad_version[seq_ids].copy()
+        self._queue.put(_Request("create", vers, np.asarray(seq_ids)))
+
+    def append(self, seq_ids: np.ndarray, new_k: jax.Array,
+               new_v: jax.Array):
+        """Synchronous paged append + async view-row update request."""
+        positions = np.asarray(self.cache.seq_lens)[seq_ids]
+        with self._lock:
+            self.cache = pc.append_tokens(
+                self.cache, jnp.asarray(seq_ids), new_k, new_v)
+            self.trad_version[seq_ids] += 1
+            vers = self.trad_version[seq_ids].copy()
+        self._queue.put(_Request(
+            "append", vers, np.asarray(seq_ids),
+            positions=positions, new_k=new_k, new_v=new_v))
+
+    def release(self, seq_ids: np.ndarray):
+        with self._lock:
+            self.cache = pc.release_seqs(self.cache, jnp.asarray(seq_ids))
+            self.trad_version[seq_ids] += 1
+            self.sc_version[seq_ids] = -1
+
+    def in_sync(self, seq_ids: np.ndarray) -> bool:
+        return bool((self.sc_version[seq_ids]
+                     >= self.trad_version[seq_ids]).all())
+
+    def fragmentation(self, seq_ids: np.ndarray) -> float:
+        return float(pc.fragmentation(self.cache, jnp.asarray(seq_ids)))
+
+    def route(self, seq_ids: np.ndarray) -> str:
+        """'shortcut' | 'paged' — version gate + fragmentation cost model."""
+        if self.in_sync(seq_ids) \
+                and self.fragmentation(seq_ids) >= self.frag_threshold:
+            return "shortcut"
+        return "paged"
+
+    def get_context(self, seq_ids: np.ndarray, route: Optional[str] = None):
+        """Materialized (k_ctx, v_ctx) for decode + the route taken."""
+        route = route or self.route(seq_ids)
+        ids = jnp.asarray(seq_ids)
+        if route == "shortcut":
+            self.routed_shortcut += 1
+            k, v = slice_context(self.view_k, self.view_v, ids)
+        else:
+            self.routed_paged += 1
+            k, v = pc.gather_context(self.cache, ids)
+        return k, v, route
+
+    def seq_lens(self, seq_ids: np.ndarray) -> np.ndarray:
+        return np.asarray(self.cache.seq_lens)[seq_ids]
+
+    # -- mapper -------------------------------------------------------------
+
+    def pump(self) -> int:
+        done = 0
+        while True:
+            batch = self._drain()
+            if not batch:
+                return done
+            self._process(batch)
+            done += len(batch)
+
+    def wait_in_sync(self, seq_ids: np.ndarray, timeout: float = 30.0):
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
+            if self.in_sync(seq_ids) and self._queue.empty():
+                return True
+            if self._mapper is None:
+                self.pump()
+            else:
+                time.sleep(self.poll_interval / 4)
+        return self.in_sync(seq_ids)
+
+    def close(self):
+        self._stop.set()
+        if self._mapper is not None:
+            self._mapper.join(timeout=5.0)
+            self._mapper = None
+
+    def _drain(self) -> list[_Request]:
+        out = []
+        while True:
+            try:
+                out.append(self._queue.get_nowait())
+            except queue.Empty:
+                return out
+
+    def _mapper_loop(self):
+        while not self._stop.is_set():
+            batch = self._drain()
+            if batch:
+                self._process(batch)
+            else:
+                time.sleep(self.poll_interval)
+
+    def _process(self, batch: list[_Request]):
+        with self._lock:
+            cache = self.cache
+        latest: dict[int, int] = {}
+        for r in batch:
+            if r.kind == "create":
+                for s, ver in zip(r.seq_ids, r.versions):
+                    self.view_k, self.view_v = compose_seq(
+                        cache, self.view_k, self.view_v, jnp.int32(int(s)))
+                    latest[int(s)] = max(latest.get(int(s), -1), int(ver))
+            else:
+                self.view_k, self.view_v = append_to_view(
+                    self.view_k, self.view_v, jnp.asarray(r.seq_ids),
+                    jnp.asarray(r.positions), r.new_k, r.new_v)
+                for s, ver in zip(r.seq_ids, r.versions):
+                    latest[int(s)] = max(latest.get(int(s), -1), int(ver))
+        # eager population before publishing versions (§3.1)
+        self.view_k.block_until_ready()
+        self.view_v.block_until_ready()
+        for s, ver in latest.items():
+            self.sc_version[s] = max(self.sc_version[s], ver)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False

@@ -1,0 +1,507 @@
+"""Trip-count-aware cost analysis over optimized HLO text.
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE, but every model
+here runs its layers (and microbatches, and loss chunks) under ``lax.scan``
+— so FLOPs/bytes/collective-bytes would be undercounted by the trip count
+(verified experimentally: an 8-step scan of matmuls reports 1/8 the flops of
+the unrolled equivalent).  This module re-derives the three roofline
+numerators directly from ``compiled.as_text()`` with loop multipliers:
+
+  * **flops** — 2 x prod(result dims) x prod(contracting dims) per ``dot``
+    (dots inside fusions included);
+  * **bytes** — operands + result per *materializing* instruction (a fusion
+    is one op over its operands/outputs, mirroring XLA's bytes-accessed
+    convention; parameter/gte/tuple/bitcast/constant are free);
+  * **collective bytes** — operand sizes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute (``-start`` counted,
+    ``-done`` skipped).
+
+Operand shapes are resolved through a per-computation symbol table (the
+text format prints operand *names* only).  While trip counts come from the
+``known_trip_count`` backend config when present, else from the loop
+condition's compare constant.  Conditional branches contribute their
+maximum.  All numbers are PER-DEVICE (the input is the post-SPMD
+partitioned module).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "u2": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_NAME_RE = re.compile(r"%([\w\.\-]+)")
+_FREE_OPS = {"parameter", "get-tuple-element", "tuple", "bitcast",
+             "constant", "iota", "after-all", "partition-id", "replica-id"}
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+_TRANSCENDENTAL = {"exponential", "log", "tanh", "rsqrt", "sqrt", "power",
+                   "divide", "erf", "logistic", "expm1", "log1p"}
+
+
+def _dims(dims: str) -> list:
+    return [int(d) for d in dims.split(",") if d]
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    for d in _dims(dims):
+        n *= d
+    return n
+
+
+def _type_bytes(type_str: str) -> int:
+    """Bytes of a (possibly tuple) type string."""
+    return sum(_shape_elems(dims) * _DTYPE_BYTES.get(dt, 4)
+               for dt, dims in _SHAPE_RE.findall(type_str)
+               if dt in _DTYPE_BYTES)
+
+
+@dataclass
+class Instr:
+    name: str
+    opcode: str
+    result_type: str
+    operands: str
+    attrs: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: list = field(default_factory=list)
+    types: dict = field(default_factory=dict)   # %name -> type string
+    is_entry: bool = False
+
+    def operand_names(self, inst: Instr) -> list:
+        return _NAME_RE.findall(inst.operands)
+
+    def operand_bytes(self, inst: Instr) -> int:
+        return sum(_type_bytes(self.types.get(n, ""))
+                   for n in self.operand_names(inst))
+
+
+@dataclass
+class CostTotals:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    bytes_by_collective: dict = field(default_factory=dict)
+    count_by_collective: dict = field(default_factory=dict)
+    transcendental_elems: float = 0.0
+    while_trips: list = field(default_factory=list)
+
+    def add(self, other: "CostTotals", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.collective_bytes += other.collective_bytes * mult
+        self.transcendental_elems += other.transcendental_elems * mult
+        self.while_trips.extend(other.while_trips)
+        for k, v in other.bytes_by_collective.items():
+            self.bytes_by_collective[k] = \
+                self.bytes_by_collective.get(k, 0) + v * mult
+        for k, v in other.count_by_collective.items():
+            self.count_by_collective[k] = \
+                self.count_by_collective.get(k, 0) + v * mult
+
+
+# ---------------------------------------------------------------------------
+# Parsing.
+# ---------------------------------------------------------------------------
+
+_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+
+
+def _split_computations(hlo: str) -> dict:
+    comps: dict = {}
+    cur: Optional[Computation] = None
+    for line in hlo.splitlines():
+        s = line.strip()
+        if cur is None:
+            m = _HEADER_RE.match(s)
+            if m and s.endswith("{"):
+                cur = Computation(name=m.group(2),
+                                  is_entry=bool(m.group(1)))
+            continue
+        if s.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        if " = " not in s:
+            continue
+        inst = _parse_instr(s)
+        if inst:
+            cur.instrs.append(inst)
+            cur.types[inst.name] = inst.result_type
+    return comps
+
+
+def _parse_instr(s: str) -> Optional[Instr]:
+    lhs, rhs = s.split(" = ", 1)
+    name = lhs.strip().lstrip("ROOT").strip().lstrip("%")
+    rhs = rhs.rstrip(",")
+    if rhs.startswith("("):  # tuple result type
+        depth = 0
+        rtype, rest = None, None
+        for i, c in enumerate(rhs):
+            if c == "(":
+                depth += 1
+            elif c == ")":
+                depth -= 1
+                if depth == 0:
+                    rtype = rhs[:i + 1]
+                    rest = rhs[i + 1:].lstrip()
+                    break
+        if rtype is None:
+            return None
+    else:
+        sp = rhs.find(" ")
+        if sp < 0:
+            return None
+        rtype = rhs[:sp]
+        rest = rhs[sp + 1:].lstrip()
+    par = rest.find("(")
+    if par < 0:
+        return None
+    opcode = rest[:par].strip()
+    depth = 0
+    end = len(rest)
+    for i in range(par, len(rest)):
+        if rest[i] == "(":
+            depth += 1
+        elif rest[i] == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    operands = rest[par + 1:end]
+    attrs = rest[end + 1:]
+    return Instr(name=name, opcode=opcode, result_type=rtype,
+                 operands=operands, attrs=attrs)
+
+
+def _called_names(inst: Instr) -> dict:
+    out: dict = {}
+    for m in re.finditer(r"(to_apply|calls|body|condition)=%?([\w\.\-]+)",
+                         inst.attrs):
+        out[m.group(1)] = m.group(2)
+    bm = re.search(r"branch_computations=\{([^}]*)\}", inst.attrs)
+    if bm:
+        out["branches"] = [b.strip().lstrip("%")
+                           for b in bm.group(1).split(",")]
+    return out
+
+
+def _dot_flops(inst: Instr, comp: Computation) -> float:
+    """2 x prod(result dims) x prod(lhs contracting dims)."""
+    result_elems = sum(_shape_elems(d)
+                       for _, d in _SHAPE_RE.findall(inst.result_type))
+    names = comp.operand_names(inst)
+    if not names:
+        return 0.0
+    lhs_type = comp.types.get(names[0], "")
+    lhs_m = _SHAPE_RE.search(lhs_type)
+    if not lhs_m:
+        return 0.0
+    lhs_dims = _dims(lhs_m.group(2))
+    cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", inst.attrs)
+    contract = 1
+    if cm:
+        for i in _dims(cm.group(1)):
+            if i < len(lhs_dims):
+                contract *= lhs_dims[i]
+    return 2.0 * result_elems * contract
+
+
+def _trip_count(inst: Instr, cond: Optional[Computation]) -> int:
+    m = re.search(r'known_trip_count[^0-9]*"?(\d+)"?', inst.attrs)
+    if m:
+        return int(m.group(1))
+    if cond is None:
+        return 1
+    consts = []
+    for ci in cond.instrs:
+        if ci.opcode == "constant":
+            mm = re.match(r"^\s*(-?\d+)\s*$", ci.operands)
+            if mm:
+                consts.append(int(mm.group(1)))
+    positive = [c for c in consts if c > 0]
+    return max(positive) if positive else 1
+
+
+# ---------------------------------------------------------------------------
+# Cost walk.
+# ---------------------------------------------------------------------------
+
+def _fusion_flops(comp: Computation, comps: dict, depth: int = 0) -> float:
+    """Dot flops inside a fused computation (bytes not counted there)."""
+    if depth > 8:
+        return 0.0
+    total = 0.0
+    for inst in comp.instrs:
+        if inst.opcode == "dot":
+            total += _dot_flops(inst, comp)
+        called = _called_names(inst)
+        for key in ("to_apply", "calls"):
+            if key in called and called[key] in comps:
+                total += _fusion_flops(comps[called[key]], comps, depth + 1)
+    return total
+
+
+def _comp_cost(comp: Computation, comps: dict, memo: dict) -> CostTotals:
+    if comp.name in memo:
+        return memo[comp.name]
+    memo[comp.name] = CostTotals()  # cycle guard
+    total = CostTotals()
+    for inst in comp.instrs:
+        op = inst.opcode
+        called = _called_names(inst)
+        if op == "while":
+            body = comps.get(called.get("body", ""))
+            cond = comps.get(called.get("condition", ""))
+            trips = _trip_count(inst, cond)
+            total.while_trips.append(trips)
+            if body:
+                total.add(_comp_cost(body, comps, memo), trips)
+            if cond:
+                total.add(_comp_cost(cond, comps, memo), trips)
+            continue
+        if op == "conditional":
+            branches = [comps[b] for b in called.get("branches", [])
+                        if b in comps]
+            if branches:
+                sub = [_comp_cost(b, comps, memo) for b in branches]
+                total.add(max(sub, key=lambda c: max(c.flops, c.bytes)))
+            total.bytes += _type_bytes(inst.result_type)
+            continue
+        if op == "fusion":
+            fused = comps.get(called.get("calls", ""))
+            if fused:
+                total.flops += _fusion_flops(fused, comps)
+                total.bytes += _fusion_bytes(inst, fused)
+            else:
+                total.bytes += comp.operand_bytes(inst) \
+                    + _type_bytes(inst.result_type)
+            continue
+        if op == "call":
+            sub = comps.get(called.get("to_apply", ""))
+            if sub:
+                total.add(_comp_cost(sub, comps, memo))
+            continue
+        base = op[:-6] if op.endswith("-start") else op
+        if base in _COLLECTIVES and not op.endswith("-done"):
+            nbytes = comp.operand_bytes(inst)
+            if nbytes == 0:
+                nbytes = _type_bytes(inst.result_type)
+            total.collective_bytes += nbytes
+            total.bytes_by_collective[base] = \
+                total.bytes_by_collective.get(base, 0) + nbytes
+            total.count_by_collective[base] = \
+                total.count_by_collective.get(base, 0) + 1
+            total.bytes += nbytes + _type_bytes(inst.result_type)
+            continue
+        if op == "dot":
+            total.flops += _dot_flops(inst, comp)
+            total.bytes += comp.operand_bytes(inst) \
+                + _type_bytes(inst.result_type)
+            continue
+        if op in _FREE_OPS or op.endswith("-done"):
+            continue
+        total.bytes += _instr_bytes(inst, comp)
+        if op in _TRANSCENDENTAL:
+            m = _SHAPE_RE.search(inst.result_type)
+            if m:
+                total.transcendental_elems += _shape_elems(m.group(2))
+    memo[comp.name] = total
+    return total
+
+
+def _fusion_bytes(inst: Instr, fused: Computation) -> int:
+    """Bytes accessed by a fusion, mirroring XLA's convention:
+
+      * a parameter whose every use is a windowed read (dynamic-slice /
+        gather) counts only the windows — per-layer weight slicing inside a
+        scanned body must not charge the whole stacked array per iteration;
+      * a parameter that is only the in-place target of dynamic-update-slice
+        counts zero reads (the buffer is aliased; untouched data not moved);
+      * if the fusion root is a dynamic-update-slice (possibly behind
+        bitcasts), the write is the update window, not the full buffer.
+    """
+    by_name = {i.name: i for i in fused.instrs}
+    uses_of: dict = {}
+    for u in fused.instrs:
+        for n in _NAME_RE.findall(u.operands):
+            uses_of.setdefault(n, []).append(u)
+
+    def through_casts(instr: Instr, down: bool) -> list:
+        """Follow single-use convert/bitcast chains to effective
+        consumers (down=True) — XLA-CPU sinks dtype converts around
+        in-place updates; semantically the window update remains."""
+        out, frontier, hops = [], [instr], 0
+        while frontier and hops < 8:
+            hops += 1
+            nxt = []
+            for i in frontier:
+                us = uses_of.get(i.name, [])
+                for u in us:
+                    if u.opcode in ("convert", "bitcast", "copy"):
+                        nxt.append(u)
+                    else:
+                        out.append(u)
+            frontier = nxt
+        return out
+
+    reads = 0
+    for p in fused.instrs:
+        if p.opcode != "parameter":
+            continue
+        eff = through_casts(p, down=True)
+        if not eff:
+            continue
+        def first_operand_is(u, name_set):
+            names = fused.operand_names(u)
+            return bool(names) and names[0] in name_set
+        # names reachable from p through casts
+        reach = {p.name}
+        frontier, hops = [p], 0
+        while frontier and hops < 8:
+            hops += 1
+            nxt = []
+            for i in frontier:
+                for u in uses_of.get(i.name, []):
+                    if u.opcode in ("convert", "bitcast", "copy"):
+                        reach.add(u.name)
+                        nxt.append(u)
+            frontier = nxt
+        if all(u.opcode in ("dynamic-slice", "gather")
+               and first_operand_is(u, reach) for u in eff):
+            reads += sum(_type_bytes(u.result_type) for u in eff)
+        elif all(u.opcode == "dynamic-update-slice"
+                 and first_operand_is(u, reach) for u in eff):
+            reads += 0  # aliased in-place target
+        else:
+            reads += _type_bytes(p.result_type)
+    # write side: resolve the root through casts; DUS writes its window
+    root = fused.instrs[-1] if fused.instrs else None
+    seen = 0
+    while root is not None and root.opcode in ("bitcast", "convert",
+                                               "copy") and seen < 8:
+        names = fused.operand_names(root)
+        root = by_name.get(names[0]) if names else None
+        seen += 1
+    if root is not None and root.opcode == "dynamic-update-slice":
+        names = fused.operand_names(root)
+        upd_t = fused.types.get(names[1], "") if len(names) > 1 else ""
+        upd = _type_bytes(upd_t) or _type_bytes(inst.result_type)
+        writes = 2 * upd  # read update + write window
+    else:
+        writes = _type_bytes(inst.result_type)
+    return reads + writes
+
+
+def _instr_bytes(inst: Instr, comp: Computation) -> int:
+    """Slice-aware bytes-accessed for one instruction (XLA convention:
+    dynamic-slice/gather touch only the sliced window, not the buffer)."""
+    op = inst.opcode
+    res = _type_bytes(inst.result_type)
+    if op == "dynamic-slice":
+        return 2 * res                       # read window + write result
+    if op == "dynamic-update-slice":
+        names = comp.operand_names(inst)
+        upd = _type_bytes(comp.types.get(names[1], "")) \
+            if len(names) > 1 else res
+        return 2 * upd                       # read update + write window
+    if op == "gather":
+        names = comp.operand_names(inst)
+        idx = _type_bytes(comp.types.get(names[1], "")) \
+            if len(names) > 1 else 0
+        return 2 * res + idx
+    if op == "scatter":
+        names = comp.operand_names(inst)
+        upd = _type_bytes(comp.types.get(names[-1], "")) \
+            if names else res
+        idx = _type_bytes(comp.types.get(names[1], "")) \
+            if len(names) > 2 else 0
+        return 2 * upd + idx
+    if op in ("slice", "pad", "reverse", "broadcast", "reshape",
+              "transpose", "copy", "convert"):
+        return comp.operand_bytes(inst) + res
+    return comp.operand_bytes(inst) + res
+
+
+def breakdown(hlo_text: str, top: int = 25) -> dict:
+    """Top flop- and byte-contributing instructions with loop multipliers —
+    the dry-run 'profile' used by the §Perf iteration loop."""
+    comps = _split_computations(hlo_text)
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        return {"flops": [], "bytes": []}
+    frows: list = []
+    brows: list = []
+
+    def walk(comp: Computation, mult: float, depth: int):
+        if depth > 16:
+            return
+        for inst in comp.instrs:
+            called = _called_names(inst)
+            op = inst.opcode
+            if op == "while":
+                body = comps.get(called.get("body", ""))
+                cond = comps.get(called.get("condition", ""))
+                trips = _trip_count(inst, cond)
+                if body:
+                    walk(body, mult * trips, depth + 1)
+                continue
+            if op == "call":
+                sub = comps.get(called.get("to_apply", ""))
+                if sub:
+                    walk(sub, mult, depth + 1)
+                continue
+            if op == "fusion":
+                fused = comps.get(called.get("calls", ""))
+                if fused:
+                    fl = _fusion_flops(fused, comps)
+                    by = _fusion_bytes(inst, fused)
+                    if fl:
+                        frows.append((fl * mult, mult, inst.name,
+                                      inst.result_type[:48]))
+                    brows.append((by * mult, mult, "fusion:" + inst.name,
+                                  inst.result_type[:48]))
+                continue
+            if op == "dot":
+                fl = _dot_flops(inst, comp)
+                frows.append((fl * mult, mult, inst.name,
+                              inst.result_type[:48]))
+                brows.append((_instr_bytes(inst, comp) * mult, mult,
+                              "dot:" + inst.name, inst.result_type[:48]))
+                continue
+            if op in _FREE_OPS or op.endswith("-done"):
+                continue
+            brows.append((_instr_bytes(inst, comp) * mult, mult,
+                          op + ":" + inst.name, inst.result_type[:48]))
+
+    walk(entry, 1.0, 0)
+    frows.sort(reverse=True)
+    brows.sort(reverse=True)
+    return {"flops": frows[:top], "bytes": brows[:top]}
+
+
+def analyze(hlo_text: str) -> CostTotals:
+    comps = _split_computations(hlo_text)
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        entry = max(comps.values(), key=lambda c: len(c.instrs),
+                    default=None)
+    if entry is None:
+        return CostTotals()
+    # descend only from the entry: subcomputations are reached through
+    # their call sites (with the right multipliers)
+    return _comp_cost(entry, comps, {})

@@ -1,0 +1,67 @@
+"""Assigned input-shape registry and dry-run input specs.
+
+Every (arch x shape) cell resolves here to (step kind, ShapeDtypeStruct
+inputs).  ``decode_*``/``long_*`` lower ``serve_step`` (one new token against
+a seq_len cache), ``prefill_32k`` lowers ``prefill_step``, ``train_4k``
+lowers ``train_step`` — per the assignment contract.
+
+``long_500k`` requires a sub-quadratic decode; pure full-attention archs are
+*skipped* (returns SKIP) and the skip is documented in DESIGN.md §5.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.data.pipeline import make_batch_specs
+from repro.runtime.serve import decode_state_struct
+
+SKIP = "skip"
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def cell_status(cfg: ArchConfig, shape: str) -> str:
+    """'ok' or SKIP (with the documented reason encoded in DESIGN.md)."""
+    spec = SHAPES[shape]
+    if spec.name == "long_500k" and not cfg.is_subquadratic:
+        return SKIP
+    return "ok"
+
+
+def input_specs(cfg: ArchConfig, shape: str, *, dtype=jnp.bfloat16) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of the cell.
+
+    train   -> {"batch": {...}}
+    prefill -> {"batch": {...}}  (no labels)
+    decode  -> {"state": DecodeState struct, "token": (B,) int32}
+    """
+    spec = SHAPES[shape]
+    B, S = spec.global_batch, spec.seq_len
+    if spec.kind in ("train", "prefill"):
+        batch = make_batch_specs(cfg, S, B)
+        if spec.kind == "prefill":
+            batch.pop("labels", None)
+        return {"batch": batch}
+    # decode: the cache holds seq_len tokens; we feed one new token
+    state = decode_state_struct(cfg, B, S, dtype)
+    return {"state": state,
+            "token": jax.ShapeDtypeStruct((B,), jnp.int32)}

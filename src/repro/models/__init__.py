@@ -1,0 +1,2 @@
+from repro.models.model import (decode_step, init_params, prefill_forward,
+                                train_forward, forward_hidden, LayerCache)  # noqa: F401

@@ -1,0 +1,229 @@
+"""Grouped-query attention with blockwise (flash-style) computation.
+
+The training/prefill path is *triangular-blockwise*: an unrolled loop over
+query tiles, each running a ``lax.scan`` over only the key/value tiles its
+causal (and sliding-window) footprint touches — so compiled FLOPs match the
+causal workload instead of doubling through a full masked product, and peak
+memory stays O(tile) instead of O(S^2).  This is also the jnp oracle for the
+Pallas ``flash_attention`` kernel.
+
+Supports: GQA/MQA, rope, qk-norm (qwen3), attention logit softcap (gemma2),
+sliding windows + per-layer local/global switching (gemma2, hymba).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, rms_norm, softcap
+
+_NEG_INF = -1e30
+
+
+def attn_init(key, cfg, dtype) -> dict:
+    from repro.models.layers import _dense_init
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, kv = cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _dense_init(ks[0], (d, h * hd), d, dtype),
+        "wk": _dense_init(ks[1], (d, kv * hd), d, dtype),
+        "wv": _dense_init(ks[2], (d, kv * hd), d, dtype),
+        "wo": _dense_init(ks[3], (h * hd, d), h * hd, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dtype)
+        p["k_norm"] = jnp.zeros((hd,), dtype)
+    return p
+
+
+def qkv_project(p: dict, x: jax.Array, cfg, positions: jax.Array):
+    """x: (B, S, D) -> q (B,S,H,hd), k/v (B,S,KV,hd), rope applied."""
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = (x @ p["wq"]).reshape(B, S, cfg.num_heads, hd)
+    k = (x @ p["wk"]).reshape(B, S, cfg.num_kv_heads, hd)
+    v = (x @ p["wv"]).reshape(B, S, cfg.num_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def pad_heads(q, k, v, cfg):
+    """Zero-pad q-groups / kv-heads to mesh-divisible counts.
+
+    q: (B,S,H,hd) with H = KV*G -> (B,S,KVp*Gp,hd); k/v: (B,S,KV,hd) ->
+    (B,S,KVp,hd).  Dead q-heads project zeros (scores 0 -> their outputs
+    are discarded by :func:`unpad_heads` before wo); dead kv-heads form
+    whole dead groups, so live outputs are bit-identical."""
+    KV = cfg.num_kv_heads
+    G = cfg.num_heads // KV
+    KVp = cfg.pad_kv_heads or KV
+    Gp = cfg.pad_q_groups or G
+    if (KVp, Gp) == (KV, G):
+        return q, k, v, cfg.num_heads
+    B, S, H, hd = q.shape
+    qg = q.reshape(B, S, KV, G, hd)
+    qg = jnp.pad(qg, ((0, 0), (0, 0), (0, KVp - KV), (0, Gp - G),
+                      (0, 0)))
+    k = jnp.pad(k, ((0, 0), (0, 0), (0, KVp - KV), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, 0), (0, KVp - KV), (0, 0)))
+    return qg.reshape(B, S, KVp * Gp, hd), k, v, KVp * Gp
+
+
+def unpad_heads(o, cfg):
+    """Drop dead heads: (B,S,KVp*Gp,hd) -> (B,S,H,hd)."""
+    KV = cfg.num_kv_heads
+    G = cfg.num_heads // KV
+    KVp = cfg.pad_kv_heads or KV
+    Gp = cfg.pad_q_groups or G
+    if (KVp, Gp) == (KV, G):
+        return o
+    B, S, Hp, hd = o.shape
+    og = o.reshape(B, S, KVp, Gp, hd)[:, :, :KV, :G]
+    return og.reshape(B, S, KV * G, hd)
+
+
+def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        chunk_q: int, chunk_kv: int, causal: bool = True,
+                        window: Optional[int] = None,
+                        attn_softcap: Optional[float] = None,
+                        prefix_len: int = 0) -> jax.Array:
+    """Flash-style attention.  q: (B,Sq,H,hd), k/v: (B,Skv,KV,hd).
+
+    ``prefix_len`` marks a bidirectional prefix (PaliGemma image tokens):
+    positions < prefix_len attend to the whole prefix regardless of order.
+    """
+    B, Sq, H, hd = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    if Sq % chunk_q:
+        chunk_q = Sq
+    if Skv % chunk_kv:
+        chunk_kv = Skv
+    scale = hd ** -0.5
+    qg = q.reshape(B, Sq, KV, G, hd) * scale
+    n_q = Sq // chunk_q
+    outs = []
+    for i in range(n_q):  # unrolled: static tile footprints
+        q_blk = jax.lax.dynamic_slice_in_dim(qg, i * chunk_q, chunk_q, 1)
+        q_pos = i * chunk_q + jnp.arange(chunk_q)
+        # static kv footprint of this tile
+        hi = min(Skv, (i + 1) * chunk_q) if causal else Skv
+        hi = math.ceil(hi / chunk_kv) * chunk_kv
+        lo = 0
+        if window is not None and causal:
+            lo = max(0, (i * chunk_q - window)) // chunk_kv * chunk_kv
+            if prefix_len:
+                lo = 0  # prefix is always visible
+        n_kv = (hi - lo) // chunk_kv
+        k_tiles = jax.lax.dynamic_slice_in_dim(k, lo, hi - lo, 1) \
+            .reshape(B, n_kv, chunk_kv, KV, hd).transpose(1, 0, 2, 3, 4)
+        v_tiles = jax.lax.dynamic_slice_in_dim(v, lo, hi - lo, 1) \
+            .reshape(B, n_kv, chunk_kv, KV, hd).transpose(1, 0, 2, 3, 4)
+        kv_pos = lo + jnp.arange(n_kv * chunk_kv).reshape(n_kv, chunk_kv)
+
+        def step(carry, tile):
+            m, l, acc = carry
+            kt, vt, kp = tile
+            s = jnp.einsum("bqkgd,bckd->bkgqc", q_blk, kt,
+                           preferred_element_type=jnp.float32)
+            if attn_softcap is not None:
+                s = softcap(s, attn_softcap)
+            mask = jnp.ones((chunk_q, chunk_kv), jnp.bool_)
+            if causal:
+                cm = q_pos[:, None] >= kp[None, :]
+                if prefix_len:
+                    cm = cm | ((q_pos[:, None] < prefix_len)
+                               & (kp[None, :] < prefix_len))
+                mask &= cm
+            if window is not None:
+                wm = kp[None, :] > (q_pos[:, None] - window)
+                if prefix_len:
+                    wm = wm | (kp[None, :] < prefix_len)
+                mask &= wm
+            s = jnp.where(mask[None, None, None], s, _NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqc,bckd->bkgqd", p.astype(vt.dtype), vt,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        def tile_attention(q_blk, k_tiles, v_tiles):
+            """One q-tile's full kv sweep.  Rematerialized as a unit: the
+            backward recomputes the O(chunk_q x S) score tiles from q/k/v
+            instead of stashing them per scan step — flash-attention
+            backward economics (2x attention FLOPs, O(tile) memory)."""
+            init = (jnp.full((B, KV, G, chunk_q), _NEG_INF, jnp.float32),
+                    jnp.zeros((B, KV, G, chunk_q), jnp.float32),
+                    jnp.zeros((B, KV, G, chunk_q, hd), jnp.float32))
+            (m, l, acc), _ = jax.lax.scan(
+                step, init, (k_tiles, v_tiles, kv_pos))
+            return acc / jnp.maximum(l, 1e-30)[..., None]
+
+        o = jax.checkpoint(
+            tile_attention,
+            policy=jax.checkpoint_policies.nothing_saveable,
+            prevent_cse=False)(q_blk, k_tiles, v_tiles)
+        outs.append(o.transpose(0, 3, 1, 2, 4).reshape(B, chunk_q, H, hd))
+    return jnp.concatenate(outs, axis=1).astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k_ctx: jax.Array, v_ctx: jax.Array,
+                     ctx_len: jax.Array, *,
+                     k_new: Optional[jax.Array] = None,
+                     v_new: Optional[jax.Array] = None,
+                     attn_softcap: Optional[float] = None,
+                     window: Optional[int] = None) -> jax.Array:
+    """One-token attention over a materialized context.
+
+    q: (B, H, hd); k_ctx/v_ctx: (B, KV, S, hd) (attention-native layout)
+    hold the *old* tokens at positions [0, ctx_len-1).  ``k_new``/``v_new``
+    (B, KV, hd) are the current token's projections, folded in by split
+    softmax (``ctx_len`` counts the new token).
+    """
+    B, H, hd = q.shape
+    KV, S = k_ctx.shape[1], k_ctx.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd) * hd ** -0.5
+    s = jnp.einsum("bkgd,bksd->bkgs", qg, k_ctx,
+                   preferred_element_type=jnp.float32)
+    pos = jnp.arange(S)[None]                        # (1, S)
+    n_old = ctx_len[:, None] - (0 if k_new is None else 1)
+    live = pos < n_old
+    if window is not None:
+        live &= pos > (ctx_len[:, None] - 1 - window)
+    if attn_softcap is not None:
+        s = softcap(s, attn_softcap)
+    s = jnp.where(live[:, None, None], s, _NEG_INF)
+    if k_new is None:
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgs,bksd->bkgd", p.astype(v_ctx.dtype), v_ctx,
+                       preferred_element_type=jnp.float32)
+        return o.reshape(B, H, hd).astype(q.dtype)
+    # the current token's kv is handled by SPLIT softmax algebra instead
+    # of concatenating a (B, S+1, KV, hd) copy of the value cache — the
+    # concat cost a full extra cache read+write per layer per step
+    # (EXPERIMENTS.md §Perf, decode hillclimb)
+    s_self = jnp.einsum("bkgd,bkd->bkg", qg, k_new,
+                        preferred_element_type=jnp.float32)
+    if attn_softcap is not None:
+        s_self = softcap(s_self, attn_softcap)
+    m = jnp.maximum(s.max(axis=-1), s_self)         # (B, KV, G)
+    p_ctx = jnp.exp(s - m[..., None])
+    p_self = jnp.exp(s_self - m)
+    denom = p_ctx.sum(axis=-1) + p_self
+    o = jnp.einsum("bkgs,bksd->bkgd", p_ctx.astype(v_ctx.dtype), v_ctx,
+                   preferred_element_type=jnp.float32)
+    o = (o + p_self[..., None] * v_new[:, :, None].astype(jnp.float32)
+         ) / denom[..., None]
+    return o.reshape(B, H, hd).astype(q.dtype)

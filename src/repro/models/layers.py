@@ -1,0 +1,94 @@
+"""Shared neural-net building blocks (pure functions over param pytrees)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def activation(x: jax.Array, kind: str) -> jax.Array:
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    raise ValueError(kind)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    return cap * jnp.tanh(x / cap)
+
+
+@jax.custom_vjp
+def grad_bf16(x: jax.Array) -> jax.Array:
+    """Identity whose COTANGENT is rounded to bf16.
+
+    Placed at the mixer/FFN branch outputs so the tensor-parallel backward
+    all-reduces (and the MoE dispatch backward gathers) carry bf16
+    payloads instead of f32 — standard mixed-precision gradient practice,
+    halving the dominant collective volume (EXPERIMENTS.md §Perf)."""
+    return x
+
+
+def _grad_bf16_fwd(x):
+    return x, None
+
+
+def _grad_bf16_bwd(_, ct):
+    return (ct.astype(jnp.bfloat16).astype(ct.dtype),)
+
+
+grad_bf16.defvjp(_grad_bf16_fwd, _grad_bf16_bwd)
+
+
+# -- rotary position embedding ------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                 # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- MLP -----------------------------------------------------------------------
+
+def mlp_apply(p: dict, x: jax.Array, act: str) -> jax.Array:
+    """SwiGLU/GeGLU MLP; ``wi`` fuses gate and up projections."""
+    h = x @ p["wi"]                                     # (..., 2*ff)
+    gate, up = jnp.split(h, 2, axis=-1)
+    return (activation(gate, act) * up) @ p["wo"]
+
+
+def mlp_init(key, d_model: int, d_ff: int, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "wi": _dense_init(k1, (d_model, 2 * d_ff), d_model, dtype),
+        "wo": _dense_init(k2, (d_ff, d_model), d_ff, dtype),
+    }
+
+
+def _dense_init(key, shape, fan_in: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, shape, jnp.float32)
+            * (fan_in ** -0.5)).astype(dtype)
+
+
+def embed_init(key, vocab: int, d_model: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d_model), jnp.float32)
+            * 0.02).astype(dtype)

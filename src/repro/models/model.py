@@ -1,0 +1,416 @@
+"""Decoder LM supporting every assigned architecture family.
+
+Execution model
+---------------
+Layer parameters are *stacked* over the layer axis and executed with
+``lax.scan`` (small HLO, fast multi-pod compiles).  Architectures whose
+attention kind varies per layer are handled without dynamic branching:
+
+  * ``local_global_period = p`` (gemma2): one scan over L/p steps whose body
+    unrolls the p sublayers with static window kinds (position p-1 global);
+  * explicit ``global_layers`` (hymba): the layer axis is segmented into
+    *runs* — singleton global layers unrolled, local stretches scanned.
+
+Three entry points:
+  * :func:`train_forward`  -- full-seq forward + chunked cross-entropy loss;
+  * :func:`prefill_forward` -- full-seq forward returning per-layer KV (and
+    SSM state) caches for the serving layer;
+  * :func:`decode_step`    -- one-token forward over materialized per-layer
+    contexts (paged-gather or shortcut-contiguous, chosen by the caller).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import constrain
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (embed_init, grad_bf16, mlp_apply,
+                                 mlp_init, rms_norm, softcap)
+
+
+# -- layer kinds / runs --------------------------------------------------------
+
+def layer_kinds(cfg: ArchConfig) -> list[str]:
+    """'global' (full causal) or 'local' (sliding window) per layer."""
+    L = cfg.num_layers
+    if cfg.sliding_window is None:
+        return ["global"] * L
+    if cfg.local_global_period:
+        p = cfg.local_global_period
+        return ["global" if i % p == p - 1 else "local" for i in range(L)]
+    if cfg.global_layers:
+        return ["global" if i in cfg.global_layers else "local"
+                for i in range(L)]
+    return ["local"] * L
+
+
+def layer_runs(cfg: ArchConfig) -> list[tuple[int, int, tuple[str, ...]]]:
+    """(start, length, kinds-per-step) segments executable as one scan."""
+    kinds = layer_kinds(cfg)
+    L = cfg.num_layers
+    p = cfg.local_global_period
+    if p and L % p == 0:
+        return [(0, L, tuple(kinds[:p]))]
+    runs: list[tuple[int, int, tuple[str, ...]]] = []
+    i = 0
+    while i < L:
+        j = i
+        while j < L and kinds[j] == kinds[i]:
+            j += 1
+        runs.append((i, j - i, (kinds[i],)))
+        i = j
+    return runs
+
+
+# -- init ----------------------------------------------------------------------
+
+def layer_init(key, cfg: ArchConfig, dtype) -> dict:
+    ks = jax.random.split(key, 6)
+    p: dict[str, Any] = {"ln1": jnp.zeros((cfg.d_model,), dtype)}
+    if cfg.has_attention:
+        p["attn"] = attn.attn_init(ks[0], cfg, dtype)
+    if cfg.has_ssm:
+        p["ssm"] = ssm_mod.ssm_init(ks[1], cfg, dtype)
+    if cfg.d_ff or cfg.num_experts:
+        p["ln2"] = jnp.zeros((cfg.d_model,), dtype)
+    if cfg.d_ff:
+        p["mlp"] = mlp_init(ks[2], cfg.d_model, cfg.d_ff, dtype)
+    if cfg.num_experts:
+        p["moe"] = moe_mod.moe_init(ks[3], cfg, dtype)
+    return p
+
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.bfloat16) -> dict:
+    k_embed, k_layers, k_head = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.num_layers)
+    params = {
+        "embed": embed_init(k_embed, cfg.vocab_size, cfg.d_model, dtype),
+        "layers": jax.vmap(
+            lambda k: layer_init(k, cfg, dtype))(layer_keys),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = embed_init(
+            k_head, cfg.vocab_size, cfg.d_model, dtype).T
+    return params
+
+
+# -- sublayer bodies -------------------------------------------------------------
+
+class LayerCache(NamedTuple):
+    """Per-layer decode cache pieces produced by prefill (stacked over L by
+    the caller).  Unused members are () placeholders to keep pytrees static."""
+    k: Any = ()
+    v: Any = ()
+    ssm: Any = ()
+
+
+def _mixer(lp: dict, h: jax.Array, cfg: ArchConfig, kind: str,
+           positions: jax.Array, want_cache: bool):
+    """Attention and/or SSM branch on pre-normed input (full sequence)."""
+    x = rms_norm(h, lp["ln1"], cfg.norm_eps)
+    outs = []
+    cache = LayerCache()
+    if cfg.has_attention:
+        q, k, v = attn.qkv_project(lp["attn"], x, cfg, positions)
+        # mesh-divisibility head padding (see ArchConfig.pad_*): zero
+        # q-heads / kv-groups so the flat head count divides the model
+        # axis -> clean head-parallel attention instead of the f32
+        # score all-reduces GSPMD emits for fractional-head layouts
+        q, k, v, n_heads = attn.pad_heads(q, k, v, cfg)
+        # pin head-logical sharding (a no-op when not divisible)
+        q = constrain(q, ("batch", None, "heads", None))
+        k = constrain(k, ("batch", None, "kv_heads", None))
+        v = constrain(v, ("batch", None, "kv_heads", None))
+        window = cfg.sliding_window if kind == "local" else None
+        o = attn.blockwise_attention(
+            q, k, v, chunk_q=cfg.attn_chunk_q, chunk_kv=cfg.attn_chunk_kv,
+            causal=True, window=window, attn_softcap=cfg.attn_softcap,
+            prefix_len=cfg.prefix_len)
+        B, S = x.shape[:2]
+        o = constrain(o, ("batch", None, "heads", None))
+        o = attn.unpad_heads(o, cfg)
+        o = o.reshape(B, S, -1) @ lp["attn"]["wo"]
+        outs.append(o)
+        if want_cache:
+            cache = cache._replace(k=k, v=v)
+    if cfg.has_ssm:
+        o, ssm_cache = ssm_mod.ssm_apply(lp["ssm"], x, cfg)
+        outs.append(o)
+        if want_cache:
+            cache = cache._replace(ssm=ssm_cache)
+    mix = outs[0] if len(outs) == 1 else (outs[0] + outs[1]) * 0.5
+    return h + grad_bf16(mix), cache
+
+
+def _ffn(lp: dict, h: jax.Array, cfg: ArchConfig):
+    """MLP / MoE (+ optional arctic-style parallel dense residual)."""
+    if not (cfg.d_ff or cfg.num_experts):
+        return h, jnp.zeros((), jnp.float32)
+    x = rms_norm(h, lp["ln2"], cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    out = 0.0
+    if cfg.num_experts:
+        mo, aux = moe_mod.moe_apply(lp["moe"], x, cfg)
+        out = out + mo
+        if cfg.dense_residual and cfg.d_ff:
+            out = out + mlp_apply(lp["mlp"], x, cfg.act)
+    elif cfg.d_ff:
+        out = out + mlp_apply(lp["mlp"], x, cfg.act)
+    return h + grad_bf16(out), aux
+
+
+def _sublayer_full(lp, h, cfg, kind, positions, want_cache):
+    # pin activations to DP sharding inside the scanned body — without this
+    # GSPMD has been observed to replicate the batch dim across the mesh for
+    # the attention einsums (16x the per-device FLOPs)
+    h = constrain(h, ("batch", None, None))
+    h, cache = _mixer(lp, h, cfg, kind, positions, want_cache)
+    h, aux = _ffn(lp, h, cfg)
+    return h, cache, aux
+
+
+# -- full-sequence forward -------------------------------------------------------
+
+def _slice_layers(layers, start: int, length: int):
+    return jax.tree.map(
+        lambda a: jax.lax.slice_in_dim(a, start, start + length, axis=0),
+        layers)
+
+
+def _embed_inputs(params, cfg: ArchConfig, batch: dict) -> jax.Array:
+    if cfg.input_mode == "tokens":
+        h = params["embed"][batch["tokens"]]
+    elif cfg.input_mode == "embeddings":
+        h = batch["embeddings"].astype(params["embed"].dtype)
+    elif cfg.input_mode == "prefix_embeddings":
+        tok = params["embed"][batch["tokens"]]
+        h = jnp.concatenate(
+            [batch["prefix_embeddings"].astype(tok.dtype), tok], axis=1)
+    else:
+        raise ValueError(cfg.input_mode)
+    return h
+
+
+def forward_hidden(params, cfg: ArchConfig, batch: dict, *,
+                   want_cache: bool = False,
+                   remat: bool = True):
+    """Embed + all layers.  Returns (hidden (B,S,D), caches, aux_loss)."""
+    h = _embed_inputs(params, cfg, batch)
+    h = constrain(h, ("batch", None, None))
+    B, S = h.shape[:2]
+    positions = jnp.arange(S)[None]
+    aux_total = jnp.zeros((), jnp.float32)
+    caches = []
+
+    for start, length, kinds in layer_runs(cfg):
+        p = len(kinds)
+        run_layers = _slice_layers(params["layers"], start, length)
+        if length == p:  # singleton (or one full period): run inline
+            sub = jax.tree.map(lambda a: a, run_layers)
+            for j, kind in enumerate(kinds):
+                lp = jax.tree.map(lambda a: a[j], sub)
+                h, cache, aux = _sublayer_full(
+                    lp, h, cfg, kind, positions, want_cache)
+                aux_total += aux
+                caches.append(jax.tree.map(lambda a: a[None] if hasattr(
+                    a, "ndim") else a, cache))
+            continue
+
+        steps = length // p
+        stacked = jax.tree.map(
+            lambda a: a.reshape((steps, p) + a.shape[1:]), run_layers)
+
+        def body(carry, step_layers, kinds=kinds, p=p):
+            h, aux_total = carry
+            step_caches = []
+            for j in range(p):
+                lp = jax.tree.map(lambda a: a[j], step_layers)
+                h, cache, aux = _sublayer_full(
+                    lp, h, cfg, kinds[j], positions, want_cache)
+                aux_total += aux
+                step_caches.append(cache)
+            out_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *step_caches) \
+                if p > 1 else step_caches[0]
+            return (h, aux_total), out_cache
+
+        if remat:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable,
+                prevent_cse=False)
+        (h, aux_total), run_caches = jax.lax.scan(
+            body, (h, aux_total), stacked)
+        if want_cache:
+            caches.append(jax.tree.map(
+                lambda a: a.reshape((length,) + a.shape[2:])
+                if p > 1 and hasattr(a, "ndim") else a, run_caches))
+
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    cache_stack = None
+    if want_cache:
+        cache_stack = jax.tree.map(
+            lambda *xs: jnp.concatenate(xs, axis=0), *caches)
+    return h, cache_stack, aux_total
+
+
+def _logits(params, cfg: ArchConfig, h: jax.Array) -> jax.Array:
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    out = h @ head
+    # keep logits vocab-sharded: without this pin GSPMD gathers the full
+    # (B, ..., V) per device, which dominates temp memory and collectives
+    out = constrain(out, ("batch",) + (None,) * (out.ndim - 2) + ("vocab",))
+    if cfg.final_softcap:
+        out = softcap(out, cfg.final_softcap)
+    return out
+
+
+def chunked_softmax_xent(params, cfg: ArchConfig, h: jax.Array,
+                         labels: jax.Array, mask: jax.Array) -> jax.Array:
+    """Cross-entropy without materializing (B, S, V) at once."""
+    B, S, D = h.shape
+    chunk = min(cfg.loss_chunk, S)
+    if S % chunk:
+        chunk = S
+    n = S // chunk
+
+    def body(carry, xs):
+        hc, lc, mc = xs
+        logits = _logits(params, cfg, hc).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        # gold logit via masked reduction: stays vocab-sharded (a gather
+        # on the sharded axis would force an all-gather of the logits)
+        vocab_iota = jax.lax.broadcasted_iota(
+            jnp.int32, logits.shape, logits.ndim - 1)
+        gold = jnp.where(vocab_iota == lc[..., None], logits, 0.0).sum(-1)
+        nll = (lse - gold) * mc
+        return carry + nll.sum(), None
+
+    xs = (h.reshape(B, n, chunk, D).swapaxes(0, 1),
+          labels.reshape(B, n, chunk).swapaxes(0, 1),
+          mask.reshape(B, n, chunk).swapaxes(0, 1))
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), xs)
+    return total / jnp.maximum(mask.sum(), 1.0)
+
+
+def train_forward(params, cfg: ArchConfig, batch: dict, *,
+                  remat: bool = True) -> jax.Array:
+    """Returns scalar loss.  batch: tokens/embeddings (+labels, loss_mask)."""
+    h, _, aux = forward_hidden(params, cfg, batch, want_cache=False,
+                               remat=remat)
+    labels = batch["labels"]
+    if cfg.input_mode == "prefix_embeddings":  # loss only on the suffix
+        h = h[:, cfg.prefix_len:]
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones(labels.shape, jnp.float32)
+    loss = chunked_softmax_xent(params, cfg, h, labels, mask)
+    return loss + cfg.router_aux_weight * aux
+
+
+# -- prefill -----------------------------------------------------------------
+
+def prefill_forward(params, cfg: ArchConfig, batch: dict):
+    """Full forward returning (last-position logits, stacked caches)."""
+    h, caches, _ = forward_hidden(params, cfg, batch, want_cache=True,
+                                  remat=False)
+    logits = _logits(params, cfg, h[:, -1])
+    return logits, caches
+
+
+# -- decode --------------------------------------------------------------------
+
+def decode_step(params, cfg: ArchConfig, token: jax.Array,
+                ctx: LayerCache, ctx_len: jax.Array):
+    """One-token decode.
+
+    token:   (B,) int32 current input token.
+    ctx:     stacked per-layer contexts —
+               k/v: (L, B, S_ctx, KV, hd) *materialized* context (old tokens
+               live in [0, ctx_len-1)); ssm: SSMCache stacked over L.
+    ctx_len: (B,) int32 context length INCLUDING the new token.
+
+    Returns (logits (B, V), new_kv (L, B, KV, hd) pair or (), new_ssm).
+    The caller appends new_kv into its pool (paged) or view (shortcut).
+    """
+    h = params["embed"][token][:, None]                   # (B, 1, D)
+    positions = (ctx_len - 1)[:, None]
+    kinds = layer_kinds(cfg)
+    B = token.shape[0]
+
+    def one_layer(h, lp, kind, ctx_l):
+        x = rms_norm(h, lp["ln1"], cfg.norm_eps)
+        outs = []
+        new_k = new_v = ()
+        new_ssm = ()
+        if cfg.has_attention:
+            q, k, v = attn.qkv_project(lp["attn"], x, cfg, positions)
+            window = cfg.sliding_window if kind == "local" else None
+            o = attn.decode_attention(
+                q[:, 0], ctx_l.k, ctx_l.v, ctx_len,
+                k_new=k[:, 0], v_new=v[:, 0],
+                attn_softcap=cfg.attn_softcap, window=window)
+            outs.append((o.reshape(B, -1) @ lp["attn"]["wo"])[:, None])
+            new_k, new_v = k[:, 0], v[:, 0]
+        if cfg.has_ssm:
+            o, new_ssm = ssm_mod.ssm_decode(lp["ssm"], x[:, 0], ctx_l.ssm,
+                                            cfg)
+            outs.append(o[:, None])
+        mix = outs[0] if len(outs) == 1 else (outs[0] + outs[1]) * 0.5
+        h = h + mix
+        h, _ = _ffn(lp, h, cfg)
+        return h, LayerCache(k=new_k, v=new_v, ssm=new_ssm)
+
+    # segment the scan exactly like the full forward
+    news = []
+    for start, length, run_kinds in layer_runs(cfg):
+        p = len(run_kinds)
+        run_layers = _slice_layers(params["layers"], start, length)
+        run_ctx = jax.tree.map(
+            lambda a: jax.lax.slice_in_dim(a, start, start + length, axis=0)
+            if hasattr(a, "ndim") else a, ctx)
+        if length == p:
+            for j, kind in enumerate(run_kinds):
+                lp = jax.tree.map(lambda a: a[j], run_layers)
+                cl = jax.tree.map(lambda a: a[j] if hasattr(a, "ndim") else a,
+                                  run_ctx)
+                h, new = one_layer(h, lp, kind, cl)
+                news.append(jax.tree.map(
+                    lambda a: a[None] if hasattr(a, "ndim") else a, new))
+            continue
+        steps = length // p
+        stacked = jax.tree.map(
+            lambda a: a.reshape((steps, p) + a.shape[1:]), run_layers)
+        stacked_ctx = jax.tree.map(
+            lambda a: a.reshape((steps, p) + a.shape[1:])
+            if hasattr(a, "ndim") else a, run_ctx)
+
+        def body(h, xs, run_kinds=run_kinds, p=p):
+            step_layers, step_ctx = xs
+            step_news = []
+            for j in range(p):
+                lp = jax.tree.map(lambda a: a[j], step_layers)
+                cl = jax.tree.map(lambda a: a[j] if hasattr(a, "ndim")
+                                  else a, step_ctx)
+                h, new = one_layer(h, lp, run_kinds[j], cl)
+                step_news.append(new)
+            out = jax.tree.map(lambda *xs: jnp.stack(xs), *step_news) \
+                if p > 1 else step_news[0]
+            return h, out
+
+        h, run_news = jax.lax.scan(body, h, (stacked, stacked_ctx))
+        news.append(jax.tree.map(
+            lambda a: a.reshape((length,) + a.shape[2:])
+            if p > 1 and hasattr(a, "ndim") else a, run_news))
+
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = _logits(params, cfg, h[:, 0])
+    new_stack = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *news)
+    return logits, new_stack

@@ -1,0 +1,217 @@
+"""Mixture-of-Experts layer: top-k routing with sort-based capacity dispatch.
+
+Dispatch strategy (TPU-friendly, static shapes):
+  1. top-k expert choice per token, router weights renormalized;
+  2. the (token, choice) pairs are sorted by expert id;
+  3. each expert segment keeps its first ``capacity`` tokens (standard
+     capacity-factor dropping), scattered to a dense ``(E, C, D)`` buffer;
+  4. two grouped einsums run the expert FFNs;
+  5. results scatter-add back with router weights.
+
+The ``(E, C, *)`` buffers carry the "expert" logical axis, so expert
+parallelism is pure sharding (XLA inserts the all-to-alls).  Supports shared
+experts (qwen2-moe) and a parallel dense residual branch (arctic).
+
+Aux loss: switch-style load-balancing loss (mean fraction * mean prob * E).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.layers import activation, mlp_apply, mlp_init, _dense_init
+
+
+def moe_init(key, cfg, dtype) -> dict:
+    d, e, ff = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": _dense_init(ks[0], (d, e), d, jnp.float32),
+        "wi": _dense_init(ks[1], (e, d, 2 * ff), d, dtype),
+        "wo": _dense_init(ks[2], (e, ff, d), ff, dtype),
+    }
+    if cfg.shared_d_ff:
+        p["shared"] = mlp_init(ks[3], d, cfg.shared_d_ff, dtype)
+    return p
+
+
+
+# ---------------------------------------------------------------------------
+# Permutation-dual gathers.
+#
+# Every tensor movement in the dispatch is a (batched) gather, which GSPMD
+# partitions on the batch axis — but autodiff turns a gather's backward
+# into a scatter-add, which GSPMD replicates (measured: the f32
+# (B, S*K, D) scatter cotangents re-replicated the arctic-480b cell).
+# Because the dispatch mappings are *permutations with known inverses*,
+# each backward is itself expressible as a gather; these custom VJPs keep
+# fwd AND bwd in partitionable gather form.
+# ---------------------------------------------------------------------------
+
+import jax as _jax
+
+
+@_jax.custom_vjp
+def _gather_tokens(x, stok):
+    """(B,S,D),(B,S*K) -> (B,S*K,D): xg[b,j] = x[b, stok[b,j]]."""
+    return jnp.take_along_axis(x, stok[..., None], axis=1)
+
+
+def _gather_tokens_fwd(x, stok):
+    return _gather_tokens(x, stok), (stok, x.shape[1])
+
+
+def _gather_tokens_bwd(res, ct):
+    stok, S = res
+    B, SK, D = ct.shape
+    K = SK // S
+    # stok holds each token id exactly K times; stable argsort groups the
+    # K occurrences of token t at rows [t*K, (t+1)*K)
+    inv = jnp.argsort(stok, axis=-1)
+    g = jnp.take_along_axis(ct, inv[..., None], axis=1)
+    return g.reshape(B, S, K, D).sum(axis=2), None
+
+
+_gather_tokens.defvjp(_gather_tokens_fwd, _gather_tokens_bwd)
+
+
+@_jax.custom_vjp
+def _pairs_to_slots(xg, src, hit, slot, keep):
+    """(B,S*K,D) pairs -> (B,E*C,D) buffer rows: buf[t] = xg[src[t]]*hit.
+
+    Inverse mapping (slot, keep): pair p fills target slot[p] iff keep[p].
+    """
+    g = jnp.take_along_axis(xg, src[..., None], axis=1)
+    return g * hit[..., None].astype(g.dtype)
+
+
+def _pairs_to_slots_fwd(xg, src, hit, slot, keep):
+    return _pairs_to_slots(xg, src, hit, slot, keep), (slot, keep)
+
+
+def _pairs_to_slots_bwd(res, ct):
+    slot, keep = res
+    safe = jnp.minimum(slot, ct.shape[1] - 1)
+    g = jnp.take_along_axis(ct, safe[..., None], axis=1)
+    return g * keep[..., None].astype(g.dtype), None, None, None, None
+
+
+_pairs_to_slots.defvjp(_pairs_to_slots_fwd, _pairs_to_slots_bwd)
+
+
+@_jax.custom_vjp
+def _slots_to_pairs(out_flat, slot, keep, src, hit):
+    """(B,E*C,D) buffer -> (B,S*K,D) pairs: y[p] = out_flat[slot[p]]*keep;
+    the exact inverse of :func:`_pairs_to_slots`."""
+    safe = jnp.minimum(slot, out_flat.shape[1] - 1)
+    g = jnp.take_along_axis(out_flat, safe[..., None], axis=1)
+    return g * keep[..., None].astype(g.dtype)
+
+
+def _slots_to_pairs_fwd(out_flat, slot, keep, src, hit):
+    return _slots_to_pairs(out_flat, slot, keep, src, hit), (src, hit)
+
+
+def _slots_to_pairs_bwd(res, ct):
+    src, hit = res
+    g = jnp.take_along_axis(ct, src[..., None], axis=1)
+    return (g * hit[..., None].astype(g.dtype), None, None, None, None)
+
+
+_slots_to_pairs.defvjp(_slots_to_pairs_fwd, _slots_to_pairs_bwd)
+
+
+def moe_capacity(cfg, tokens: int) -> int:
+    """Capacity per dispatch group (a batch row: ``tokens`` = seq_len)."""
+    cap = int(tokens * cfg.top_k * cfg.capacity_factor / cfg.num_experts)
+    return max(8, -(-cap // 8) * 8)  # round up to 8 for tiling
+
+
+def moe_apply(p: dict, x: jax.Array, cfg) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (out (B,S,D), aux_loss ()).
+
+    Dispatch is PER BATCH ROW (sort/capacity/scatter all operate along the
+    sequence axis), so under data parallelism every step is shard-local by
+    construction and the only cross-device traffic is the canonical MoE
+    all-to-all that moves the (B, E, C, D) buffer between the batch and
+    expert shardings.  A global-sort dispatch (previous revision) forced
+    GSPMD into a distributed argsort — ~50x the collective bytes on the
+    arctic-480b dry-run (EXPERIMENTS.md §Perf iteration 1).
+    """
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.top_k
+    C = moe_capacity(cfg, S)                                 # per row
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        p["router"])                         # (B, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, K)                   # (B, S, K)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (computed before dropping)
+    frac = jnp.mean(
+        jax.nn.one_hot(top_i, E, dtype=jnp.float32).sum(2), axis=(0, 1))
+    aux = E * jnp.sum(frac * probs.mean((0, 1))) / K
+
+    # per-row sort of (token, choice) pairs by expert id
+    flat_e = top_i.reshape(B, S * K)
+    flat_w = top_w.reshape(B, S * K)
+    tok = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(S, dtype=jnp.int32), K)[None], (B, S * K))
+    order = jnp.argsort(flat_e, axis=-1)                     # local sort
+    se = jnp.take_along_axis(flat_e, order, axis=-1)
+    stok = jnp.take_along_axis(tok, order, axis=-1)
+    sw = jnp.take_along_axis(flat_w, order, axis=-1)
+    # rank within each expert segment; drop ranks >= capacity
+    seg_start = jax.vmap(
+        lambda a: jnp.searchsorted(a, a, side="left"))(se)
+    rank = jnp.arange(S * K, dtype=jnp.int32)[None] - seg_start
+    keep = rank < C
+    slot = jnp.where(keep, se * C + rank, E * C)             # E*C = drop
+
+    # ALL data movement below is along-axis (gather/scatter with leading
+    # batch dims) or pure permutation — forms GSPMD partitions on the
+    # batch axis without replication (explicit 2-D scatter indices do NOT
+    # partition and forced full replication of (B, S*K, D) tensors)
+    # build the (E*C)-slot buffer with GATHERS ONLY: GSPMD partitions
+    # along-axis gathers on the batch dim but replicates every scatter
+    # form we tried (measured: .at[b,i].set and vmapped row scatters each
+    # force an all-gather of the (B, S*K, D) operand)
+    ord2 = jnp.argsort(slot, axis=-1)                        # by target
+    sorted_slots = jnp.take_along_axis(slot, ord2, axis=-1)
+    targets = jnp.broadcast_to(jnp.arange(E * C, dtype=jnp.int32)[None],
+                               (B, E * C))
+    j = jax.vmap(jnp.searchsorted)(sorted_slots, targets)    # (B, E*C)
+    j = jnp.minimum(j, S * K - 1)
+    hit = jnp.take_along_axis(sorted_slots, j, axis=-1) == targets
+    src = jnp.take_along_axis(ord2, j, axis=-1)              # source pair
+    xg = _gather_tokens(x, stok)                             # (B, S*K, D)
+    buf = _pairs_to_slots(xg, src, hit, slot, keep)          # local
+    # dispatch boundary: everything above is shard-local on the batch
+    # axis with E replicated; the pin below slices E onto the model axis
+    # (free forward; the backward is ONE bf16 all-gather per layer instead
+    # of the f32 all-reduces GSPMD emits for cross-shard gathers)
+    buf = constrain(buf.astype(x.dtype).reshape(B, E, C, D),
+                    ("batch", "expert", None, None))
+
+    h = jnp.einsum("becd,edf->becf", buf, p["wi"])           # (B,E,C,2ff)
+    gate, up = jnp.split(h, 2, axis=-1)
+    h = activation(gate, cfg.act) * up
+    out_e = jnp.einsum("becf,efd->becd", h, p["wo"])
+    out_e = constrain(out_e, ("batch", "expert", None, None))
+    # combine boundary: explicit bf16 all-gather of the expert outputs
+    # back to E-replicated so the pair gather below is shard-local
+    out_flat = constrain(out_e.reshape(B, E * C, D),
+                         ("batch", None, None))
+
+    contrib = _slots_to_pairs(out_flat, slot, keep, src, hit)
+    contrib = contrib * sw.astype(x.dtype)[..., None]
+    # combine WITHOUT a scatter-add: un-sort via the inverse permutation,
+    # then the K choices of each token are adjacent -> sum over K
+    inv = jnp.argsort(order, axis=-1)
+    contrib = jnp.take_along_axis(contrib, inv[..., None], axis=1)
+    out = contrib.reshape(B, S, K, D).sum(axis=2)
+
+    if "shared" in p:
+        out = out + mlp_apply(p["shared"], x, cfg.act)
+    return out, aux

@@ -1,0 +1,188 @@
+"""Mamba2 / SSD (state-space duality) mixer, arXiv:2405.21060.
+
+Training/prefill uses the chunked SSD algorithm — quadratic *within* fixed
+chunks (MXU-friendly matmuls) plus a linear inter-chunk state recurrence —
+so compute is O(S * chunk) and decode state is O(1): exactly why the ssm
+and hybrid architectures keep the ``long_500k`` cell runnable.
+
+Decode is the classic selective-scan single-step recurrence over
+``(B, H, P, N)`` state plus a small causal-conv ring buffer.
+
+Single B/C group (n_groups=1), as in the released mamba2 configs.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _dense_init, rms_norm
+
+
+class SSMCache(NamedTuple):
+    """Decode-time state for one layer (stacked over layers by the runtime)."""
+    conv: jax.Array   # (B, d_conv-1, d_inner + 2*N) rolling conv window
+    state: jax.Array  # (B, H, P, N) SSM state
+
+
+def ssm_init(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    di = cfg.ssm_d_inner
+    n = cfg.ssm_state
+    h = cfg.ssm_heads
+    conv_dim = di + 2 * n
+    ks = jax.random.split(key, 5)
+    return {
+        "in_proj": _dense_init(ks[0], (d, 2 * di + 2 * n + h), d, dtype),
+        "out_proj": _dense_init(ks[1], (di, d), di, dtype),
+        "conv_w": _dense_init(ks[2], (cfg.ssm_conv, conv_dim), cfg.ssm_conv,
+                              dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": jnp.zeros((di,), dtype),
+    }
+
+
+def _split_proj(cfg, zxbcdt: jax.Array):
+    di, n, h = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di:di + di + 2 * n]
+    dt = zxbcdt[..., di + di + 2 * n:di + di + 2 * n + h]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv via shifted adds (d_conv is small: 4)."""
+    d_conv = w.shape[0]
+    out = xBC * w[-1]
+    for j in range(1, d_conv):
+        shifted = jnp.pad(xBC, ((0, 0), (j, 0), (0, 0)))[:, :-j]
+        out = out + shifted * w[-1 - j]
+    return jax.nn.silu(out + b)
+
+
+def _segsum_chunk(dA: jax.Array):
+    """Within-chunk cumulative sums used by SSD.  dA: (B, NC, Q, H)."""
+    cs = jnp.cumsum(dA, axis=2)
+    return cs
+
+
+def ssd_chunked(x, dt, A, B, C, D, chunk: int):
+    """SSD forward.  x: (B,S,H,P); dt: (B,S,H); A: (H,) negative;
+    B,C: (B,S,N); D: (H,).  Returns (y: (B,S,H,P), final_state (B,H,P,N))."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    pad = (-s) % chunk
+    if pad:  # zero-pad: dt=0 makes padded steps identity/no-contribution
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    s_padded = s + pad
+    nc = s_padded // chunk
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Bc = B.reshape(b, nc, chunk, n)
+    Cc = C.reshape(b, nc, chunk, n)
+
+    dA = dtc * A                                       # (b,nc,q,h), negative
+    cs = _segsum_chunk(dA)                             # cumulative within chunk
+
+    # 1. intra-chunk (quadratic in chunk): Y_ij = C_i B_j^T L_ij dt_j x_j
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc,
+                        preferred_element_type=jnp.float32)
+    # mask the exponent BEFORE exp: upper-triangular entries are
+    # exp(positive) -> inf, and where(tri, inf, 0) still propagates NaN
+    # through the backward pass (0 * inf)
+    tri = jnp.tril(jnp.ones((chunk, chunk), jnp.bool_))
+    delta = cs[:, :, :, None, :] - cs[:, :, None, :, :]  # (b,nc,i,j,h)
+    delta = jnp.where(tri[None, None, :, :, None], delta, -1e30)
+    L = jnp.exp(delta)
+    y_diag = jnp.einsum("bcij,bcijh,bcjh,bcjhp->bcihp",
+                        scores, L, dtc, xc.astype(jnp.float32))
+
+    # 2. per-chunk input state contribution
+    chunk_sum = cs[:, :, -1, :]                        # (b,nc,h)
+    decay_to_end = jnp.exp(chunk_sum[:, :, None, :] - cs)  # (b,nc,q,h)
+    states = jnp.einsum("bcqn,bcqh,bcqhp->bchpn",
+                        Bc, dtc * decay_to_end, xc.astype(jnp.float32))
+
+    # 3. inter-chunk recurrence
+    def step(carry, inp):
+        st, da = inp                                   # (b,h,p,n), (b,h)
+        new = carry * jnp.exp(da)[:, :, None, None] + st
+        return new, carry                              # emit *entering* state
+
+    init = jnp.zeros((b, h, p, n), jnp.float32)
+    final, prev_states = jax.lax.scan(
+        step, init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_sum.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (b,nc,h,p,n)
+
+    # 4. state -> output within chunk
+    y_off = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", Cc, prev_states,
+                       jnp.exp(cs))
+    y = (y_diag + y_off).reshape(b, s_padded, h, p) + D[:, None] * x.astype(
+        jnp.float32)
+    return y[:, :s].astype(x.dtype), final
+
+
+def ssm_apply(p: dict, x: jax.Array, cfg) -> tuple[jax.Array, SSMCache]:
+    """Full-sequence (train/prefill) pass.  x: (B, S, D)."""
+    B, S, _ = x.shape
+    di, n, h = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+    z, xBC_raw, dt = _split_proj(cfg, x @ p["in_proj"])
+    xBC = _causal_conv(xBC_raw, p["conv_w"], p["conv_b"])
+    xs = xBC[..., :di].reshape(B, S, h, cfg.ssm_head_dim)
+    Bm = xBC[..., di:di + n]
+    Cm = xBC[..., di + n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, final = ssd_chunked(xs, dt, A, Bm, Cm, p["D"], cfg.ssm_chunk)
+    y = y.reshape(B, S, di) * jax.nn.silu(z.astype(jnp.float32)).astype(
+        y.dtype)
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    # decode conv window = the last d_conv-1 *pre-conv* xBC inputs
+    dc = cfg.ssm_conv
+    conv_tail = jnp.pad(xBC_raw, ((0, 0), (dc - 1, 0), (0, 0)))[:, S:, :]
+    return out, SSMCache(conv=conv_tail, state=final)
+
+
+def ssm_decode(p: dict, x: jax.Array, cache: SSMCache, cfg):
+    """Single-token step.  x: (B, D) -> (out (B, D), new cache)."""
+    B, _ = x.shape
+    di, n, h = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+    z, xBC_t, dt = _split_proj(cfg, x @ p["in_proj"])
+    window = jnp.concatenate([cache.conv, xBC_t[:, None]], axis=1)  # (B,dc,·)
+    conv_out = jax.nn.silu(
+        jnp.einsum("bjc,jc->bc", window.astype(jnp.float32),
+                   p["conv_w"].astype(jnp.float32)) + p["conv_b"].astype(
+            jnp.float32)).astype(x.dtype)
+    xs = conv_out[..., :di].reshape(B, h, cfg.ssm_head_dim)
+    Bm = conv_out[..., di:di + n]
+    Cm = conv_out[..., di + n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,h)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A)                                         # (B,h)
+    state = cache.state * dA[:, :, None, None] + jnp.einsum(
+        "bn,bhp,bh->bhpn", Bm.astype(jnp.float32),
+        xs.astype(jnp.float32), dt)
+    y = jnp.einsum("bn,bhpn->bhp", Cm.astype(jnp.float32), state) \
+        + p["D"][:, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, di).astype(x.dtype) * jax.nn.silu(
+        z.astype(jnp.float32)).astype(x.dtype)
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    return y @ p["out_proj"], SSMCache(conv=window[:, 1:], state=state)
+
+
+def ssm_cache_init(cfg, batch: int, dtype) -> SSMCache:
+    di, n = cfg.ssm_d_inner, cfg.ssm_state
+    return SSMCache(
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, di + 2 * n), dtype),
+        state=jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                         cfg.ssm_state), jnp.float32),
+    )

@@ -1,0 +1,5 @@
+from repro.optim.adamw import (  # noqa: F401
+    AdamWState, adamw_init, adamw_update)
+from repro.optim.schedule import wsd_schedule  # noqa: F401
+from repro.optim.compression import (  # noqa: F401
+    compress_int8, decompress_int8, compressed_psum)

@@ -1,0 +1,98 @@
+"""AdamW with optionally-factored second moment (Adafactor-style) for the
+very large architectures, plus global-norm clipping.
+
+States mirror the parameter pytree, so ``distributed.param_specs`` shards
+them identically to the weights (ZeRO: optimizer state lives on the same
+shards as its parameter slice — no extra collectives at update time).
+
+``factored=True`` stores row/col second-moment statistics for >=2-D params
+(memory: O(n+m) instead of O(n*m)), which is what lets the 104B/480B configs
+fit optimizer state in HBM at 256 chips; see EXPERIMENTS.md §Dry-run.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any              # first moment, param-shaped (param dtype f32)
+    v: Any              # second moment: param-shaped OR (row, col) tuple
+    # factored entries are dicts {"vr": ..., "vc": ...}
+
+
+def _is_factored_leaf(p: jax.Array, factored: bool) -> bool:
+    return factored and p.ndim >= 2 and p.shape[-1] >= 128 \
+        and p.shape[-2] >= 128
+
+
+def adamw_init(params, factored: bool = False) -> AdamWState:
+    def v_init(p):
+        if _is_factored_leaf(p, factored):
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                    jnp.float32)}
+        return jnp.zeros(p.shape, jnp.float32)
+
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        v=jax.tree.map(v_init, params),
+    )
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(
+        jnp.sum(jnp.square(g.astype(jnp.float32)))
+        for g in jax.tree.leaves(tree)))
+
+
+def adamw_update(grads, state: AdamWState, params, *,
+                 lr: jax.Array, b1: float = 0.9, b2: float = 0.95,
+                 eps: float = 1e-8, weight_decay: float = 0.1,
+                 clip_norm: Optional[float] = 1.0, factored: bool = False):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.where(
+        (clip_norm is not None) & (gnorm > (clip_norm or 1.0)),
+        (clip_norm or 1.0) / jnp.maximum(gnorm, 1e-12), 1.0)
+    step = state.step + 1
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        if isinstance(v, dict):  # factored second moment
+            g2 = jnp.square(g) + 1e-30
+            vr = b2 * v["vr"] + (1 - b2) * g2.mean(axis=-1)
+            vc = b2 * v["vc"] + (1 - b2) * g2.mean(axis=-2)
+            # rank-1 reconstruction v ~= vr vc / mean(vr)
+            denom = jnp.maximum(vr.mean(axis=-1, keepdims=True), 1e-30)
+            vhat = (vr[..., None] * vc[..., None, :]
+                    / denom[..., None]) / bc2
+            v_new: Any = {"vr": vr, "vc": vc}
+        else:
+            v = b2 * v + (1 - b2) * jnp.square(g)
+            vhat = v / bc2
+            v_new = v
+        update = (m / bc1) / (jnp.sqrt(vhat) + eps)
+        p32 = p.astype(jnp.float32)
+        p_new = p32 - lr * (update + weight_decay * p32)
+        return p_new.astype(p.dtype), m, v_new
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v)
+           for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "clip_scale": scale}
+    return new_p, AdamWState(step=step, m=new_m, v=new_v), metrics

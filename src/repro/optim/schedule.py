@@ -1,0 +1,28 @@
+"""Learning-rate schedules (pure functions of the step scalar)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def wsd_schedule(step, *, peak_lr: float, warmup_steps: int,
+                 total_steps: int, decay_frac: float = 0.2,
+                 floor: float = 0.1):
+    """Warmup-Stable-Decay: linear warmup, flat plateau, linear decay to
+    ``floor * peak`` over the last ``decay_frac`` of training."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = step / jnp.maximum(warmup_steps, 1)
+    decay_steps = max(int(total_steps * decay_frac), 1)
+    decay_start = total_steps - decay_steps
+    decay = 1.0 - (1.0 - floor) * jnp.clip(
+        (step - decay_start) / decay_steps, 0.0, 1.0)
+    return peak_lr * jnp.minimum(jnp.minimum(warm, 1.0), decay)
+
+
+def cosine_schedule(step, *, peak_lr: float, warmup_steps: int,
+                    total_steps: int, floor: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - warmup_steps)
+                    / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return peak_lr * warm * cos

@@ -1,0 +1,3 @@
+from repro.runtime.train import TrainStep, make_train_step  # noqa: F401
+from repro.runtime.serve import (  # noqa: F401
+    DecodeState, decode_state_specs, make_prefill_step, make_serve_step)

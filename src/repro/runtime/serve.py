@@ -1,0 +1,205 @@
+"""Serving runtime: prefill + decode steps over the shortcut or paged cache.
+
+Two jit-able decode paths, mirroring the paper's two access paths:
+
+  * **shortcut** (:func:`make_serve_step`) — decode over the contiguous
+    per-sequence view ``(L, B, S_cap, KV, hd)``: token positions are address
+    arithmetic, zero data-dependent gathers.  This is the paper's shortcut
+    directory applied to KV serving, and the default dry-run `serve_step`.
+  * **paged** (:func:`make_paged_serve_step`) — decode through the block
+    table: a dependent gather (table load -> block gather) materializes the
+    context first.  This is the "traditional directory" baseline the
+    roofline comparison measures against.
+
+State layout is one NamedTuple so the launcher can derive shardings from
+logical names (``decode_state_names``) and jit with donated buffers.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import model as M
+from repro.models.ssm import SSMCache
+from repro.kvcache import paged_cache as pc
+
+
+class DecodeState(NamedTuple):
+    """Decode-time state.  Unused members are () (e.g. no view_k for pure
+    SSM archs, no ssm_* for pure attention)."""
+    view_k: Any          # (L, B, S_cap, KV, hd) or ()
+    view_v: Any
+    ssm_conv: Any        # (L, B, d_conv-1, conv_dim) or ()
+    ssm_state: Any       # (L, B, H, P, N) or ()
+    ctx_len: jax.Array   # (B,) tokens already materialized in the cache
+
+
+def decode_state_struct(cfg: ArchConfig, batch: int, s_cap: int,
+                        dtype=jnp.bfloat16) -> DecodeState:
+    """ShapeDtypeStruct stand-ins (dry-run contract)."""
+    L, B = cfg.num_layers, batch
+    vk = vv = ()
+    sc = ss = ()
+    if cfg.has_attention:
+        # attention-native layout: kv-head-major, positions contiguous —
+        # the score/pv einsums consume it without per-layer transposes
+        # (measured: layout copies were ~40% of decode HBM traffic)
+        shape = (L, B, cfg.num_kv_heads, s_cap, cfg.resolved_head_dim)
+        vk = jax.ShapeDtypeStruct(shape, dtype)
+        vv = jax.ShapeDtypeStruct(shape, dtype)
+    if cfg.has_ssm:
+        conv_dim = cfg.ssm_d_inner + 2 * cfg.ssm_state
+        sc = jax.ShapeDtypeStruct((L, B, cfg.ssm_conv - 1, conv_dim), dtype)
+        ss = jax.ShapeDtypeStruct(
+            (L, B, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+            jnp.float32)
+    return DecodeState(view_k=vk, view_v=vv, ssm_conv=sc, ssm_state=ss,
+                       ctx_len=jax.ShapeDtypeStruct((B,), jnp.int32))
+
+
+def decode_state_names(cfg: ArchConfig) -> DecodeState:
+    """Logical dim names parallel to :func:`decode_state_struct`."""
+    vk = vv = ()
+    sc = ss = ()
+    if cfg.has_attention:
+        vk = vv = ["layer", "batch", "kv_heads", "ctx", "head_dim"]
+    if cfg.has_ssm:
+        sc = ["layer", "batch", None, "ssm_inner"]
+        ss = ["layer", "batch", "ssm_heads", None, None]
+    return DecodeState(view_k=vk, view_v=vv, ssm_conv=sc, ssm_state=ss,
+                       ctx_len=["batch"])
+
+
+def decode_state_specs(cfg: ArchConfig, struct: DecodeState, mesh,
+                       rules=None) -> DecodeState:
+    """NamedSharding pytree for a decode-state struct on ``mesh``."""
+    from jax.sharding import NamedSharding
+    from repro.distributed.sharding import logical_spec
+    names = decode_state_names(cfg)
+
+    def one(s, n):
+        if s == () or n == ():
+            return ()
+        return NamedSharding(mesh, logical_spec(s.shape, n, mesh, rules))
+
+    return DecodeState(*[one(s, n) for s, n in zip(struct, names)])
+
+
+def decode_state_init(cfg: ArchConfig, batch: int, s_cap: int,
+                      dtype=jnp.bfloat16) -> DecodeState:
+    """Zero-initialized real state (used by examples/tests)."""
+    struct = decode_state_struct(cfg, batch, s_cap, dtype)
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype), struct,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+# ---------------------------------------------------------------------------
+# Prefill.
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg: ArchConfig, s_cap: int,
+                      dtype=jnp.bfloat16) -> Callable:
+    """(params, batch) -> (last-pos logits, DecodeState).
+
+    Runs the full forward once, then linearizes the per-layer caches into
+    the S_cap-padded shortcut view (the *create request* of the serving
+    layer, executed eagerly because prefill is itself off the decode path).
+    """
+    def prefill(params, batch):
+        logits, caches = M.prefill_forward(params, cfg, batch)
+        lead = batch.get("tokens", batch.get("embeddings"))
+        B = lead.shape[0]
+        vk = vv = ()
+        sc = ss = ()
+        S = 0
+        if cfg.has_attention:
+            k, v = caches.k, caches.v          # (L, B, S, KV, hd)
+            L, _, S = k.shape[:3]
+            pad = s_cap - S
+            # (L,B,S,KV,hd) -> attention-native (L,B,KV,S,hd), padded
+            vk = jnp.pad(k.astype(dtype).transpose(0, 1, 3, 2, 4),
+                         ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+            vv = jnp.pad(v.astype(dtype).transpose(0, 1, 3, 2, 4),
+                         ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+        if cfg.has_ssm:
+            sc = caches.ssm.conv.astype(dtype)  # (L, B, dc-1, conv_dim)
+            ss = caches.ssm.state               # (L, B, H, P, N) f32
+            if S == 0:
+                S = lead.shape[1]
+        if cfg.input_mode == "prefix_embeddings":
+            S = lead.shape[1] + cfg.prefix_len if not cfg.has_attention else S
+        ctx_len = jnp.full((B,), S, jnp.int32)
+        return logits, DecodeState(view_k=vk, view_v=vv, ssm_conv=sc,
+                                   ssm_state=ss, ctx_len=ctx_len)
+    return prefill
+
+
+def _write_row(view, idx, new):
+    """view (L,B,KV,S,hd) <- new (L,B,KV,hd) at per-batch position idx
+    (broadcast (1,B,1,1,1)) along the S axis."""
+    L, B, KV, S, hd = view.shape
+    pos = jnp.broadcast_to(idx, (L, B, KV, 1, hd))
+    return jnp.put_along_axis(view, pos, new[:, :, :, None], axis=3,
+                              inplace=False)
+
+
+# ---------------------------------------------------------------------------
+# Decode: shortcut path.
+# ---------------------------------------------------------------------------
+
+def make_serve_step(cfg: ArchConfig) -> Callable:
+    """(params, state, token (B,)) -> (next_token (B,), new state).
+
+    The shortcut decode: attention reads the contiguous view; the new
+    token's KV is scattered into position ctx_len (one row per sequence) —
+    the *update request* replay, fused into the step.
+    """
+    def serve_step(params, state: DecodeState, token: jax.Array):
+        B = token.shape[0]
+        ssm_ctx = SSMCache(conv=state.ssm_conv, state=state.ssm_state) \
+            if cfg.has_ssm else ()
+        ctx = M.LayerCache(k=state.view_k, v=state.view_v, ssm=ssm_ctx)
+        ctx_len_inc = state.ctx_len + 1          # includes current token
+        logits, new = M.decode_step(params, cfg, token, ctx, ctx_len_inc)
+        vk, vv = state.view_k, state.view_v
+        if cfg.has_attention:
+            # along-axis row write: one index dim (position within S),
+            # everything else batched — stays a windowed in-place update
+            # instead of the full-cache f32 transpose XLA emits for a
+            # generic 2-D-index scatter
+            idx = state.ctx_len[None, :, None, None, None]
+            vk = _write_row(vk, idx, new.k.astype(vk.dtype))
+            vv = _write_row(vv, idx, new.v.astype(vv.dtype))
+        sc, ss = state.ssm_conv, state.ssm_state
+        if cfg.has_ssm:
+            sc, ss = new.ssm.conv.astype(jnp.asarray(sc).dtype), new.ssm.state
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_token, DecodeState(view_k=vk, view_v=vv, ssm_conv=sc,
+                                       ssm_state=ss, ctx_len=ctx_len_inc)
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Decode: paged (traditional) path — the roofline baseline.
+# ---------------------------------------------------------------------------
+
+def make_paged_serve_step(cfg: ArchConfig) -> Callable:
+    """(params, cache: PagedKVCache, token, seq_ids) ->
+    (next_token, cache).  Context is materialized through the block-table
+    indirection every step (two dependent gathers), then attention runs over
+    the gathered copy — the cost the shortcut eliminates."""
+    def serve_step(params, cache: pc.PagedKVCache, token: jax.Array,
+                   seq_ids: jax.Array):
+        k_ctx, v_ctx = pc.gather_context(cache, seq_ids)
+        ctx = M.LayerCache(k=k_ctx, v=v_ctx, ssm=())
+        ctx_len_inc = cache.seq_lens[seq_ids] + 1
+        logits, new = M.decode_step(params, cfg, token, ctx, ctx_len_inc)
+        cache = pc.append_tokens(cache, seq_ids, new.k, new.v)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_token, cache
+    return serve_step

@@ -1,0 +1,19 @@
+"""Shared test fixtures.
+
+NOTE: no XLA_FLAGS device-count override here — smoke tests and benches
+must see the real single CPU device (the 512-device override belongs to
+launch/dryrun.py and the dedicated subprocess-based distributed tests).
+"""
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def unique_keys(rng, n, lo=1, hi=2**31):
+    """Distinct uint32 keys, avoiding 0 and the EMPTY sentinel."""
+    return rng.choice(np.arange(lo, hi, dtype=np.uint32), size=n,
+                      replace=False)

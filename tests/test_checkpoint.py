@@ -1,0 +1,107 @@
+"""Checkpointer: atomicity, async writer, retention GC, elastic restore."""
+import json
+import os
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer, latest_step
+from repro.optim.adamw import AdamWState
+
+
+def make_tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "params": {"w": jax.random.normal(k, (8, 4)),
+                   "b": jnp.zeros((4,))},
+        "opt": AdamWState(step=jnp.int32(7),
+                          m={"w": jnp.ones((8, 4)), "b": jnp.zeros((4,))},
+                          v={"w": jnp.ones((8, 4)), "b": jnp.zeros((4,))}),
+    }
+
+
+def test_save_restore_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    tree = make_tree()
+    ck.save(3, tree)
+    assert latest_step(str(tmp_path)) == 3
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                        tree)
+    out = ck.restore(3, like)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert isinstance(out["opt"], AdamWState)  # NamedTuple reconstructed
+
+
+def test_async_save(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    tree = make_tree()
+    ck.save_async(5, tree)
+    ck.wait()
+    assert latest_step(str(tmp_path)) == 5
+    out = ck.restore(5, tree)
+    np.testing.assert_array_equal(np.asarray(out["params"]["w"]),
+                                  np.asarray(tree["params"]["w"]))
+
+
+def test_crashed_tmp_dir_ignored_and_gcd(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    # simulate a crash mid-write: leftover .tmp with partial contents
+    crash = tmp_path / "step_9.tmp"
+    crash.mkdir()
+    (crash / "arr_00000.npy").write_bytes(b"garbage")
+    assert latest_step(str(tmp_path)) is None
+    ck.save(10, make_tree())
+    assert latest_step(str(tmp_path)) == 10
+    assert not crash.exists()          # GC'd by the successful save
+
+
+def test_retention_gc(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    for s in [1, 2, 3, 4]:
+        ck.save(s, make_tree(s))
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(tmp_path))
+    assert steps == [3, 4]
+
+
+def test_restore_shape_mismatch_raises(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, {"w": jnp.zeros((4, 4))})
+    with pytest.raises(ValueError, match="shape"):
+        ck.restore(1, {"w": jax.ShapeDtypeStruct((8, 4), jnp.float32)})
+
+
+def test_restore_missing_array_raises(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, {"w": jnp.zeros((4,))})
+    with pytest.raises(KeyError):
+        ck.restore(1, {"w": jax.ShapeDtypeStruct((4,), jnp.float32),
+                       "extra": jax.ShapeDtypeStruct((2,), jnp.float32)})
+
+
+def test_elastic_restore_with_shardings(tmp_path):
+    """Arrays restore onto an explicit (single-device here) sharding —
+    the mesh-A-save / mesh-B-restore path."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    ck = Checkpointer(str(tmp_path))
+    tree = {"w": jnp.arange(16.0).reshape(4, 4)}
+    ck.save(2, tree)
+    mesh = jax.make_mesh((1,), ("data",))
+    shardings = {"w": NamedSharding(mesh, P())}
+    out = ck.restore(2, tree, shardings=shardings)
+    np.testing.assert_array_equal(np.asarray(out["w"]),
+                                  np.asarray(tree["w"]))
+    assert out["w"].sharding == shardings["w"]
+
+
+def test_manifest_is_complete(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, make_tree())
+    with open(tmp_path / "step_1" / "MANIFEST.json") as f:
+        manifest = json.load(f)
+    assert manifest["step"] == 1
+    files = set(os.listdir(tmp_path / "step_1")) - {"MANIFEST.json"}
+    assert files == {m["file"] for m in manifest["arrays"].values()}

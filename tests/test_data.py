@@ -1,0 +1,95 @@
+"""Data pipeline: determinism, shard disjointness, modality stubs."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get
+from repro.data.pipeline import DataConfig, SyntheticLM, make_batch_specs
+
+
+def test_batches_deterministic():
+    cfg = get("internlm2_1_8b").reduced()
+    pipe = SyntheticLM(cfg, DataConfig(seq_len=32, global_batch=8, seed=7))
+    a = pipe.batch(step=3, shard=1, num_shards=4)
+    b = pipe.batch(step=3, shard=1, num_shards=4)
+    np.testing.assert_array_equal(np.asarray(a["tokens"]),
+                                  np.asarray(b["tokens"]))
+
+
+def test_steps_and_shards_differ():
+    cfg = get("internlm2_1_8b").reduced()
+    pipe = SyntheticLM(cfg, DataConfig(seq_len=32, global_batch=8))
+    s0 = np.asarray(pipe.batch(0, 0, 4)["tokens"])
+    s1 = np.asarray(pipe.batch(1, 0, 4)["tokens"])
+    o1 = np.asarray(pipe.batch(0, 1, 4)["tokens"])
+    assert not (s0 == s1).all()
+    assert not (s0 == o1).all()
+
+
+def test_labels_are_next_tokens():
+    cfg = get("internlm2_1_8b").reduced()
+    pipe = SyntheticLM(cfg, DataConfig(seq_len=32, global_batch=4))
+    b = pipe.batch(0)
+    np.testing.assert_array_equal(np.asarray(b["tokens"])[:, 1:],
+                                  np.asarray(b["labels"])[:, :-1])
+
+
+def test_reshard_preserves_global_batch():
+    """Elastic rescale: 2 shards x b/2 vs 4 shards x b/4 cover different
+    partitions but each is internally consistent."""
+    cfg = get("internlm2_1_8b").reduced()
+    pipe = SyntheticLM(cfg, DataConfig(seq_len=16, global_batch=8))
+    two = [pipe.batch(0, s, 2)["tokens"].shape[0] for s in range(2)]
+    four = [pipe.batch(0, s, 4)["tokens"].shape[0] for s in range(4)]
+    assert sum(two) == sum(four) == 8
+
+
+def test_modality_stubs():
+    mg = get("musicgen_medium").reduced()
+    pipe = SyntheticLM(mg, DataConfig(seq_len=16, global_batch=2))
+    b = pipe.batch(0)
+    assert b["embeddings"].shape == (2, 16, mg.d_model)
+    pg = get("paligemma_3b").reduced()
+    pipe = SyntheticLM(pg, DataConfig(seq_len=16, global_batch=2))
+    b = pipe.batch(0)
+    assert b["prefix_embeddings"].shape == (2, pg.prefix_len, pg.d_model)
+    assert b["tokens"].shape == (2, 16 - pg.prefix_len)
+
+
+def test_specs_match_real_batches():
+    for arch in ["internlm2_1_8b", "musicgen_medium", "paligemma_3b"]:
+        cfg = get(arch).reduced()
+        specs = make_batch_specs(cfg, 32, 4)
+        pipe = SyntheticLM(cfg, DataConfig(seq_len=32, global_batch=4))
+        real = pipe.batch(0)
+        assert set(specs) == set(real), arch
+        for k in specs:
+            assert tuple(specs[k].shape) == tuple(real[k].shape), (arch, k)
+
+
+def test_loss_decreases_on_synthetic_stream():
+    """The stream is learnable: a few training steps reduce loss below
+    the log(V) random floor."""
+    import jax.numpy as jnp
+    from repro.models import model as M
+    from repro.optim.adamw import adamw_init, adamw_update
+    cfg = get("internlm2_1_8b").reduced()
+    pipe = SyntheticLM(cfg, DataConfig(seq_len=64, global_batch=8))
+    params = M.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    opt = adamw_init(params)
+
+    @jax.jit
+    def step(params, opt, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: M.train_forward(p, cfg, batch, remat=False))(params)
+        params, opt, _ = adamw_update(grads, opt, params,
+                                      lr=jnp.float32(1e-2),
+                                      weight_decay=0.0)
+        return params, opt, loss
+
+    losses = []
+    for i in range(30):
+        params, opt, loss = step(params, opt, pipe.batch(i))
+        losses.append(float(loss))
+    assert np.isfinite(losses).all()
+    assert min(losses[-5:]) < losses[0] - 0.5, losses[:3] + losses[-3:]

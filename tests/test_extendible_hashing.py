@@ -1,0 +1,149 @@
+"""EH core: dict-oracle equivalence, structural invariants, hypothesis
+property tests, and the shortcut-view equivalence (paper §2/§4)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import extendible_hashing as eh
+
+from conftest import unique_keys
+
+
+def build(keys, vals, *, depth=8, slots=16, capacity=512):
+    state = eh.eh_create(max_global_depth=depth, bucket_slots=slots,
+                         capacity=capacity)
+    return eh.eh_insert_many(state, jnp.asarray(keys), jnp.asarray(vals))
+
+
+class TestLookup:
+    def test_all_inserted_found(self, rng):
+        keys = unique_keys(rng, 500)
+        vals = np.arange(500, dtype=np.uint32)
+        st_ = build(keys, vals)
+        assert int(st_.dropped) == 0
+        out = np.asarray(eh.eh_lookup_many(st_, jnp.asarray(keys)))
+        np.testing.assert_array_equal(out, vals)
+
+    def test_absent_keys_miss(self, rng):
+        keys = unique_keys(rng, 300)
+        st_ = build(keys[:200], np.arange(200, dtype=np.uint32))
+        out = np.asarray(eh.eh_lookup_many(st_, jnp.asarray(keys[200:])))
+        assert (out == 0xFFFFFFFF).all()
+
+    def test_overwrite_updates_value(self, rng):
+        keys = unique_keys(rng, 50)
+        st_ = build(keys, np.arange(50, dtype=np.uint32))
+        st_ = eh.eh_insert_many(st_, jnp.asarray(keys[:10]),
+                                jnp.asarray(np.full(10, 999, np.uint32)))
+        out = np.asarray(eh.eh_lookup_many(st_, jnp.asarray(keys[:10])))
+        assert (out == 999).all()
+        # no double-count
+        assert int(eh.eh_num_entries(st_)) == 50
+
+
+class TestInvariants:
+    @pytest.mark.parametrize("n", [10, 100, 700])
+    def test_structural_invariants(self, rng, n):
+        keys = unique_keys(rng, n)
+        st_ = build(keys, np.arange(n, dtype=np.uint32))
+        report = eh.check_invariants(st_)
+        assert report["ok"], report["errors"]
+
+    def test_directory_doubles_progressively(self, rng):
+        keys = unique_keys(rng, 600)
+        state = eh.eh_create(max_global_depth=8, bucket_slots=16,
+                             capacity=512)
+        depths = []
+        for i in range(0, 600, 100):
+            state = eh.eh_insert_many(
+                state, jnp.asarray(keys[i:i + 100]),
+                jnp.asarray(np.arange(i, i + 100, dtype=np.uint32)))
+            depths.append(int(state.global_depth))
+        assert depths == sorted(depths)
+        assert depths[-1] > 0
+
+
+class TestShortcutView:
+    """The composed view answers exactly like the traditional path."""
+
+    @pytest.mark.parametrize("n", [50, 400])
+    def test_view_equivalence(self, rng, n):
+        keys = unique_keys(rng, n)
+        st_ = build(keys, np.arange(n, dtype=np.uint32))
+        g = int(st_.global_depth)
+        vk, vv = eh.compose_shortcut(st_, 1 << g)
+        probe = np.concatenate([keys, unique_keys(rng, 100, lo=2**31,
+                                                  hi=2**32 - 2)])
+        trad = eh.eh_lookup_many(st_, jnp.asarray(probe))
+        shortcut = eh.shortcut_lookup_many(vk, vv, st_.global_depth,
+                                           jnp.asarray(probe))
+        np.testing.assert_array_equal(np.asarray(trad),
+                                      np.asarray(shortcut))
+
+    def test_remap_after_split_restores_equivalence(self, rng):
+        """rewiring.remap_slots replay == fresh compose (update request)."""
+        from repro.core import rewiring
+        keys = unique_keys(rng, 400)
+        st0 = build(keys[:200], np.arange(200, dtype=np.uint32))
+        g0 = int(st0.global_depth)
+        vk, vv = eh.compose_shortcut(st0, 1 << g0)
+        st1 = eh.eh_insert_many(
+            st0, jnp.asarray(keys[200:]),
+            jnp.asarray(np.arange(200, 400, dtype=np.uint32)))
+        if int(st1.global_depth) != g0:
+            pytest.skip("directory doubled; update-request replay "
+                        "does not apply (create request instead)")
+        dir_np = np.asarray(st1.directory[: 1 << g0])
+        slots = jnp.arange(1 << g0, dtype=jnp.int32)
+        vk = rewiring.remap_slots(vk, st1.bucket_keys, slots,
+                                  jnp.asarray(dir_np))
+        vv = rewiring.remap_slots(vv, st1.bucket_vals, slots,
+                                  jnp.asarray(dir_np))
+        fresh_k, fresh_v = eh.compose_shortcut(st1, 1 << g0)
+        np.testing.assert_array_equal(np.asarray(vk), np.asarray(fresh_k))
+        np.testing.assert_array_equal(np.asarray(vv), np.asarray(fresh_v))
+
+
+class TestHypothesis:
+    @settings(deadline=None, max_examples=20)
+    @given(st.lists(st.integers(min_value=1, max_value=2**31 - 1),
+                    min_size=1, max_size=200, unique=True),
+           st.integers(min_value=0, max_value=2**32 - 1))
+    def test_matches_python_dict(self, keys, seed):
+        """EH == dict for any insert sequence (values = index)."""
+        keys = np.asarray(keys, np.uint32)
+        vals = np.arange(len(keys), dtype=np.uint32)
+        st_ = build(keys, vals, depth=10, slots=8, capacity=1024)
+        oracle = dict(zip(keys.tolist(), vals.tolist()))
+        out = np.asarray(eh.eh_lookup_many(st_, jnp.asarray(keys)))
+        for k, got in zip(keys.tolist(), out.tolist()):
+            assert got == oracle[k]
+        report = eh.check_invariants(st_)
+        assert report["ok"], report["errors"]
+
+    @settings(deadline=None, max_examples=10)
+    @given(st.lists(st.integers(min_value=1, max_value=2**31 - 1),
+                    min_size=2, max_size=120, unique=True))
+    def test_insertion_order_irrelevant(self, keys):
+        keys = np.asarray(keys, np.uint32)
+        vals = np.arange(len(keys), dtype=np.uint32)
+        a = build(keys, vals, depth=10, slots=8, capacity=1024)
+        perm = np.random.default_rng(0).permutation(len(keys))
+        b = build(keys[perm], vals[perm], depth=10, slots=8, capacity=1024)
+        probe = jnp.asarray(keys)
+        np.testing.assert_array_equal(
+            np.asarray(eh.eh_lookup_many(a, probe)),
+            np.asarray(eh.eh_lookup_many(b, probe)))
+
+    @settings(deadline=None, max_examples=10)
+    @given(st.lists(st.integers(min_value=1, max_value=2**31 - 1),
+                    min_size=1, max_size=150, unique=True))
+    def test_fan_in_is_power_of_two_per_bucket(self, keys):
+        """I2 (paper Fig 6): each bucket is referenced by exactly
+        2^(g-l) contiguous slots."""
+        keys = np.asarray(keys, np.uint32)
+        st_ = build(keys, np.arange(len(keys), dtype=np.uint32),
+                    depth=10, slots=8, capacity=1024)
+        report = eh.check_invariants(st_)
+        assert report["ok"], report["errors"]

@@ -1,0 +1,128 @@
+"""Paged KV cache + shortcut view: allocation, equivalence, routing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kvcache import paged_cache as pc
+from repro.kvcache.shortcut_cache import ShortcutKVManager
+
+
+def make_cache(L=2, nb=64, bs=4, kv=2, hd=8, max_seqs=4, mbps=16):
+    return pc.cache_create(L, nb, bs, kv, hd, max_seqs, mbps,
+                           dtype=jnp.float32)
+
+
+def rand_kv(rng, L, B, S, KV, hd):
+    return (jnp.asarray(rng.normal(size=(L, B, S, KV, hd)).astype(
+        np.float32)),
+        jnp.asarray(rng.normal(size=(L, B, S, KV, hd)).astype(np.float32)))
+
+
+def test_prefill_then_gather_roundtrip(rng):
+    cache = make_cache()
+    k, v = rand_kv(rng, 2, 2, 8, 2, 8)
+    cache = pc.write_prefill(cache, jnp.asarray([0, 1]), k, v)
+    kc, vc = pc.gather_context(cache, jnp.asarray([0, 1]))
+    kt = np.asarray(k).transpose(0, 1, 3, 2, 4)   # native layout
+    vt = np.asarray(v).transpose(0, 1, 3, 2, 4)
+    np.testing.assert_allclose(np.asarray(kc[:, :, :, :8]), kt)
+    np.testing.assert_allclose(np.asarray(vc[:, :, :, :8]), vt)
+    assert np.asarray(cache.seq_lens)[:2].tolist() == [8, 8]
+
+
+def test_append_crosses_block_boundary(rng):
+    cache = make_cache(bs=4)
+    k, v = rand_kv(rng, 2, 1, 4, 2, 8)
+    cache = pc.write_prefill(cache, jnp.asarray([0]), k, v)
+    appended = []
+    for t in range(6):  # crosses into blocks 2 and 3
+        nk = jnp.asarray(rng.normal(size=(2, 1, 2, 8)).astype(np.float32))
+        nv = jnp.asarray(rng.normal(size=(2, 1, 2, 8)).astype(np.float32))
+        cache = pc.append_tokens(cache, jnp.asarray([0]), nk, nv)
+        appended.append((nk, nv))
+    assert int(cache.seq_lens[0]) == 10
+    kc, _ = pc.gather_context(cache, jnp.asarray([0]))
+    for t, (nk, _) in enumerate(appended):
+        np.testing.assert_allclose(np.asarray(kc[:, 0, :, 4 + t]),
+                                   np.asarray(nk[:, 0]))
+
+
+def test_release_recycles_blocks(rng):
+    cache = make_cache(nb=8, bs=4, mbps=4)
+    k, v = rand_kv(rng, 2, 2, 8, 2, 8)
+    cache = pc.write_prefill(cache, jnp.asarray([0, 1]), k, v)
+    assert int(cache.free_count) == 4
+    cache = pc.release_seqs(cache, jnp.asarray([0]))
+    assert int(cache.free_count) == 6
+    assert int(cache.seq_lens[0]) == 0
+    # freed blocks are reusable
+    cache = pc.write_prefill(cache, jnp.asarray([2]), k[:, :1], v[:, :1])
+    assert int(cache.free_count) == 4
+
+
+def test_fragmentation_statistic(rng):
+    cache = make_cache(nb=32, bs=4)
+    k, v = rand_kv(rng, 2, 1, 16, 2, 8)
+    cache = pc.write_prefill(cache, jnp.asarray([0]), k, v)
+    # fresh prefill allocates contiguous blocks -> fragmentation 0
+    assert float(pc.fragmentation(cache, jnp.asarray([0]))) == 0.0
+
+
+class TestShortcutManager:
+    def test_paged_and_shortcut_context_agree(self, rng):
+        cache = make_cache()
+        mgr = ShortcutKVManager(cache, seq_capacity=64)
+        k, v = rand_kv(rng, 2, 2, 8, 2, 8)
+        mgr.prefill(np.array([0, 1]), k, v)
+        assert not mgr.in_sync(np.array([0, 1]))
+        mgr.pump()
+        assert mgr.in_sync(np.array([0, 1]))
+        kp, vp, _ = mgr.get_context(np.array([0, 1]), route="paged")
+        ks, vs, _ = mgr.get_context(np.array([0, 1]), route="shortcut")
+        sl = int(mgr.seq_lens(np.array([0]))[0])
+        np.testing.assert_allclose(np.asarray(kp[:, :, :, :sl]),
+                                   np.asarray(ks[:, :, :, :sl]))
+        np.testing.assert_allclose(np.asarray(vp[:, :, :, :sl]),
+                                   np.asarray(vs[:, :, :, :sl]))
+
+    def test_append_keeps_view_in_sync(self, rng):
+        cache = make_cache()
+        mgr = ShortcutKVManager(cache, seq_capacity=64)
+        k, v = rand_kv(rng, 2, 1, 4, 2, 8)
+        mgr.prefill(np.array([0]), k, v)
+        mgr.pump()
+        for _ in range(5):
+            nk = jnp.asarray(rng.normal(size=(2, 1, 2, 8)).astype(
+                np.float32))
+            nv = jnp.asarray(rng.normal(size=(2, 1, 2, 8)).astype(
+                np.float32))
+            mgr.append(np.array([0]), nk, nv)
+        assert not mgr.in_sync(np.array([0]))
+        mgr.pump()
+        assert mgr.in_sync(np.array([0]))
+        kp, vp, _ = mgr.get_context(np.array([0]), route="paged")
+        ks, vs, _ = mgr.get_context(np.array([0]), route="shortcut")
+        sl = int(mgr.seq_lens(np.array([0]))[0])
+        np.testing.assert_allclose(np.asarray(kp[:, :, :, :sl]),
+                                   np.asarray(ks[:, :, :, :sl]))
+
+    def test_route_prefers_paged_when_contiguous(self, rng):
+        cache = make_cache()
+        mgr = ShortcutKVManager(cache, seq_capacity=64,
+                                frag_threshold=0.25)
+        k, v = rand_kv(rng, 2, 1, 8, 2, 8)
+        mgr.prefill(np.array([0]), k, v)
+        mgr.pump()
+        # contiguous fresh prefill: fragmentation 0 -> paged is fine
+        assert mgr.route(np.array([0])) == "paged"
+
+    def test_release_invalidates_view(self, rng):
+        cache = make_cache()
+        mgr = ShortcutKVManager(cache, seq_capacity=64)
+        k, v = rand_kv(rng, 2, 1, 4, 2, 8)
+        mgr.prefill(np.array([0]), k, v)
+        mgr.pump()
+        mgr.release(np.array([0]))
+        assert not mgr.in_sync(np.array([0]))
+        assert mgr.route(np.array([0])) == "paged"

@@ -1,0 +1,164 @@
+"""Per-architecture smoke tests (reduced configs, CPU): one forward/train
+step asserting output shapes + no NaNs, plus prefill->decode consistency
+against the full forward — the strongest cache-correctness check.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED, get
+from repro.models import model as M
+from repro.models.ssm import SSMCache
+
+B, S = 2, 64
+
+
+def make_batch(cfg, key, with_labels=True):
+    kt, ke, kl = jax.random.split(key, 3)
+    batch = {}
+    if cfg.input_mode == "tokens":
+        toks = jax.random.randint(kt, (B, S + 1), 0, cfg.vocab_size)
+        batch["tokens"] = toks[:, :-1]
+        labels = toks[:, 1:]
+    elif cfg.input_mode == "embeddings":
+        batch["embeddings"] = jax.random.normal(
+            ke, (B, S, cfg.d_model), jnp.float32) * 0.02
+        labels = jax.random.randint(kl, (B, S), 0, cfg.vocab_size)
+    else:  # prefix_embeddings
+        toks = jax.random.randint(kt, (B, S + 1), 0, cfg.vocab_size)
+        batch["tokens"] = toks[:, :-1]
+        batch["prefix_embeddings"] = jax.random.normal(
+            ke, (B, cfg.prefix_len, cfg.d_model), jnp.float32) * 0.02
+        labels = toks[:, 1:]
+    if with_labels:
+        batch["labels"] = labels
+    return batch
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_train_step_smoke(arch):
+    """One reduced-config forward+backward: finite loss, finite grads."""
+    cfg = get(arch).reduced()
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(cfg, key, jnp.float32)
+    batch = make_batch(cfg, key)
+    loss, grads = jax.value_and_grad(
+        lambda p: M.train_forward(p, cfg, batch))(params)
+    assert np.isfinite(float(loss)), arch
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g))
+                         for g in jax.tree.leaves(grads)))
+    assert np.isfinite(float(gnorm)), arch
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_prefill_shapes(arch):
+    cfg = get(arch).reduced()
+    key = jax.random.PRNGKey(1)
+    params = M.init_params(cfg, key, jnp.float32)
+    batch = make_batch(cfg, key, with_labels=False)
+    logits, caches = M.prefill_forward(params, cfg, batch)
+    assert logits.shape == (B, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits)).all()
+    s_total = S + (cfg.prefix_len
+                   if cfg.input_mode == "prefix_embeddings" else 0)
+    if cfg.has_attention:
+        L = cfg.num_layers
+        assert caches.k.shape == (L, B, s_total, cfg.num_kv_heads,
+                                  cfg.resolved_head_dim)
+    if cfg.has_ssm:
+        assert caches.ssm.state.shape[0] == cfg.num_layers
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_decode_matches_full_forward(arch):
+    """prefill(S) + decode_step == full forward at position S.
+
+    Exercises rope positions, GQA, window masks, SSM state carry, and the
+    decode cache layout for every architecture family."""
+    cfg = get(arch).reduced()
+    key = jax.random.PRNGKey(2)
+    params = M.init_params(cfg, key, jnp.float32)
+
+    toks = jax.random.randint(key, (B, S + 1), 0, cfg.vocab_size)
+    if cfg.input_mode == "embeddings":
+        # decode embeds tokens via the embedding table, so feed the same
+        # rows as "frame embeddings" to make the comparison exact
+        emb = params["embed"][toks]
+        full_batch = {"embeddings": emb}
+        pre_batch = {"embeddings": emb[:, :S]}
+    elif cfg.input_mode == "prefix_embeddings":
+        prefix = jax.random.normal(
+            key, (B, cfg.prefix_len, cfg.d_model), jnp.float32) * 0.02
+        full_batch = {"tokens": toks, "prefix_embeddings": prefix}
+        pre_batch = {"tokens": toks[:, :S], "prefix_embeddings": prefix}
+    else:
+        full_batch = {"tokens": toks}
+        pre_batch = {"tokens": toks[:, :S]}
+
+    # ground truth: last-position logits of the full (S+1) forward
+    want, _ = M.prefill_forward(params, cfg, full_batch)
+
+    # prefill S tokens, then decode token S
+    _, caches = M.prefill_forward(params, cfg, pre_batch)
+    prefix_len = cfg.prefix_len if cfg.input_mode == "prefix_embeddings" \
+        else 0
+    s_ctx = S + prefix_len
+    pad = 16
+    if cfg.has_attention:
+        # decode ctx uses the attention-native (L,B,KV,S,hd) layout
+        k = jnp.pad(caches.k.transpose(0, 1, 3, 2, 4),
+                    ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(caches.v.transpose(0, 1, 3, 2, 4),
+                    ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+    else:
+        k = v = ()
+    ssm = caches.ssm if cfg.has_ssm else ()
+    ctx = M.LayerCache(k=k, v=v, ssm=ssm)
+    ctx_len = jnp.full((B,), s_ctx + 1, jnp.int32)
+    got, new = M.decode_step(params, cfg, toks[:, S], ctx, ctx_len)
+
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+    if cfg.has_attention:
+        assert new.k.shape == (cfg.num_layers, B, cfg.num_kv_heads,
+                               cfg.resolved_head_dim)
+
+
+def test_layer_runs_cover_all_layers():
+    for arch in ASSIGNED:
+        cfg = get(arch)
+        runs = M.layer_runs(cfg)
+        covered = []
+        for start, length, kinds in runs:
+            covered.extend(range(start, start + length))
+            assert length % len(kinds) == 0
+        assert covered == list(range(cfg.num_layers)), arch
+
+
+def test_gemma2_local_global_pattern():
+    cfg = get("gemma2_27b")
+    kinds = M.layer_kinds(cfg)
+    assert kinds[0] == "local" and kinds[1] == "global"
+    assert all(kinds[i] == ("global" if i % 2 else "local")
+               for i in range(len(kinds)))
+
+
+def test_hymba_global_layers():
+    cfg = get("hymba_1_5b")
+    kinds = M.layer_kinds(cfg)
+    assert [i for i, k in enumerate(kinds) if k == "global"] == [0, 15, 31]
+
+
+def test_num_params_close_to_nameplate():
+    """Analytic parameter counts should be in the right ballpark of the
+    architecture nameplates (loose: vocab/head variants differ)."""
+    expect = {"command_r_plus_104b": (80e9, 130e9),
+              "gemma2_27b": (20e9, 36e9),
+              "qwen3_4b": (3e9, 6e9),
+              "internlm2_1_8b": (1.2e9, 2.5e9),
+              "mamba2_370m": (0.25e9, 0.55e9),
+              "arctic_480b": (380e9, 560e9)}
+    for arch, (lo, hi) in expect.items():
+        n = get(arch).num_params()
+        assert lo < n < hi, (arch, n)

@@ -1,0 +1,113 @@
+"""Optimizer, schedules, gradient compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim.adamw import adamw_init, adamw_update, global_norm
+from repro.optim.compression import compress_int8, decompress_int8
+from repro.optim.schedule import cosine_schedule, wsd_schedule
+
+
+def test_adamw_converges_on_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0, 2.0])}
+    opt = adamw_init(params)
+    target = jnp.asarray([1.0, 2.0, -1.0])
+    for _ in range(300):
+        grads = {"w": 2 * (params["w"] - target)}
+        params, opt, _ = adamw_update(
+            grads, opt, params, lr=jnp.float32(0.05), weight_decay=0.0)
+    np.testing.assert_allclose(np.asarray(params["w"]),
+                               np.asarray(target), atol=1e-2)
+
+
+def test_factored_second_moment_shapes():
+    params = {"big": jnp.zeros((256, 512)), "small": jnp.zeros((64,))}
+    opt = adamw_init(params, factored=True)
+    assert isinstance(opt.v["big"], dict)
+    assert opt.v["big"]["vr"].shape == (256,)
+    assert opt.v["big"]["vc"].shape == (512,)
+    assert opt.v["small"].shape == (64,)  # too small to factor
+
+
+def test_factored_still_converges():
+    params = {"w": jnp.full((128, 128), 3.0)}
+    opt = adamw_init(params, factored=True)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, opt, _ = adamw_update(
+            grads, opt, params, lr=jnp.float32(0.05), weight_decay=0.0,
+            factored=True)
+    assert float(jnp.abs(params["w"]).max()) < 0.15
+
+
+def test_grad_clipping():
+    params = {"w": jnp.zeros((4,))}
+    opt = adamw_init(params)
+    grads = {"w": jnp.full((4,), 100.0)}
+    _, _, metrics = adamw_update(grads, opt, params,
+                                 lr=jnp.float32(0.1), clip_norm=1.0)
+    assert float(metrics["grad_norm"]) == pytest.approx(200.0)
+    assert float(metrics["clip_scale"]) == pytest.approx(1 / 200.0,
+                                                         rel=1e-4)
+
+
+def test_wsd_schedule_shape():
+    lr = [float(wsd_schedule(s, peak_lr=1.0, warmup_steps=10,
+                             total_steps=100)) for s in range(101)]
+    assert lr[0] == 0.0
+    assert lr[10] == pytest.approx(1.0)
+    assert lr[50] == pytest.approx(1.0)     # plateau
+    assert lr[100] == pytest.approx(0.1)    # floor
+    assert all(a >= b - 1e-6 for a, b in zip(lr[10:], lr[11:]))
+
+
+def test_cosine_schedule_monotone_decay():
+    lr = [float(cosine_schedule(s, peak_lr=1.0, warmup_steps=5,
+                                total_steps=50)) for s in range(51)]
+    assert lr[5] == pytest.approx(1.0)
+    assert lr[50] == pytest.approx(0.1, rel=1e-3)
+
+
+class TestCompression:
+    def test_roundtrip_error_bounded(self, rng):
+        g = jnp.asarray(rng.normal(size=(1000,)).astype(np.float32))
+        q, scale, err = compress_int8(g)
+        deq = decompress_int8(q, scale, g.shape, jnp.float32)
+        # per-block max/127 quantization error bound
+        blocks = np.asarray(jnp.abs(g)).reshape(-1, 250 if False else 1)
+        assert float(jnp.abs(deq - g).max()) <= \
+            float(jnp.abs(g).max()) / 127.0 + 1e-6
+        np.testing.assert_allclose(np.asarray(g - deq), np.asarray(err),
+                                   atol=1e-6)
+
+    @settings(deadline=None, max_examples=10)
+    @given(st.integers(min_value=1, max_value=2000),
+           st.integers(min_value=0, max_value=2**31 - 1))
+    def test_error_feedback_drives_bias_to_zero(self, n, seed):
+        """Property: with EF, the *accumulated* transmitted signal tracks
+        the accumulated true gradient (bias does not grow)."""
+        rng = np.random.default_rng(seed)
+        g_true = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+        err = None
+        sent_total = jnp.zeros_like(g_true)
+        for _ in range(8):
+            q, scale, err = compress_int8(g_true, err)
+            sent_total = sent_total + decompress_int8(
+                q, scale, g_true.shape, jnp.float32)
+        # after T rounds of the SAME gradient, sum(sent) ~= T * g - err
+        resid = np.abs(np.asarray(sent_total + err - 8 * g_true))
+        assert resid.max() < 1e-4
+
+    def test_all_zero_gradient(self):
+        g = jnp.zeros((100,))
+        q, scale, err = compress_int8(g)
+        assert float(jnp.abs(decompress_int8(
+            q, scale, g.shape, jnp.float32)).max()) == 0.0
+        assert float(jnp.abs(err).max()) == 0.0
+
+
+def test_global_norm():
+    tree = {"a": jnp.asarray([3.0]), "b": jnp.asarray([4.0])}
+    assert float(global_norm(tree)) == pytest.approx(5.0)

@@ -1,0 +1,76 @@
+"""Prefix-cache index: EH-backed prefix matching for the serving layer."""
+import numpy as np
+import pytest
+
+from repro.kvcache.prefix_index import PrefixCacheIndex
+
+
+def test_exact_prefix_roundtrip(rng):
+    idx = PrefixCacheIndex(block_size=4)
+    toks = rng.integers(0, 50000, 32).tolist()
+    idx.insert_prefix(toks, list(range(100, 108)))
+    idx.pump()
+    n, blocks = idx.match_prefix(toks)
+    assert n == 32
+    assert blocks == list(range(100, 108))
+
+
+def test_partial_prefix_match(rng):
+    idx = PrefixCacheIndex(block_size=4)
+    shared = rng.integers(0, 50000, 16).tolist()
+    idx.insert_prefix(shared + rng.integers(0, 50000, 16).tolist(),
+                      list(range(8)))
+    idx.pump()
+    # a new request sharing only the first 16 tokens
+    other = shared + rng.integers(50001, 60000, 16).tolist()
+    n, blocks = idx.match_prefix(other)
+    assert n == 16
+    assert blocks == [0, 1, 2, 3]
+
+
+def test_diverging_first_block_misses(rng):
+    idx = PrefixCacheIndex(block_size=4)
+    idx.insert_prefix(rng.integers(0, 50000, 16).tolist(), [0, 1, 2, 3])
+    idx.pump()
+    n, blocks = idx.match_prefix(rng.integers(50001, 60000, 16).tolist())
+    assert n == 0 and blocks == []
+
+
+def test_chain_prevents_middle_collision(rng):
+    """Merkle chaining: identical block CONTENT at position i does not
+    match unless the whole prefix [0, i] matches."""
+    idx = PrefixCacheIndex(block_size=4)
+    a = rng.integers(0, 50000, 8).tolist()
+    idx.insert_prefix(a, [10, 11])
+    idx.pump()
+    # same second block, different first block
+    b = rng.integers(50001, 60000, 4).tolist() + a[4:]
+    n, blocks = idx.match_prefix(b)
+    assert n == 0
+
+
+def test_incomplete_blocks_ignored(rng):
+    idx = PrefixCacheIndex(block_size=8)
+    toks = rng.integers(0, 50000, 20).tolist()   # 2.5 blocks
+    assert idx.insert_prefix(toks, [1, 2, 3]) == 2
+    idx.pump()
+    n, blocks = idx.match_prefix(toks)
+    assert n == 16 and blocks == [1, 2]
+
+
+def test_many_prefixes_shared_system_prompt(rng):
+    """Realistic mix: one system prompt + many user suffixes."""
+    idx = PrefixCacheIndex(block_size=4, capacity=8192)
+    system = rng.integers(0, 50000, 24).tolist()
+    idx.insert_prefix(system, list(range(6)))
+    next_block = 6
+    for _ in range(20):
+        suffix = rng.integers(0, 50000, 8).tolist()
+        full = system + suffix
+        n, blocks = idx.match_prefix(full)
+        assert n >= 24, "system prompt must always hit"
+        idx.insert_prefix(full, blocks + [next_block, next_block + 1])
+        next_block += 2
+        idx.pump()
+    s = idx.stats()
+    assert s["hits"] == 20 and s["in_sync"]

@@ -1,0 +1,90 @@
+"""Shortcut-EH orchestration: version gating, async maintenance, fan-in
+routing — the paper's §4.1 architecture."""
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import extendible_hashing as eh
+from repro.core.shortcut_eh import ShortcutEH
+
+from conftest import unique_keys
+
+
+def test_out_of_sync_until_pumped(rng):
+    keys = unique_keys(rng, 200)
+    sc = ShortcutEH(max_global_depth=8, bucket_slots=16, capacity=256)
+    sc.insert(keys, np.arange(200, dtype=np.uint32))
+    assert not sc.in_sync()          # maintenance is asynchronous
+    assert not sc.use_shortcut()
+    # lookups still correct via the traditional path
+    out = np.asarray(sc.lookup(keys))
+    np.testing.assert_array_equal(out, np.arange(200, dtype=np.uint32))
+    assert sc.routed_traditional == 1 and sc.routed_shortcut == 0
+    sc.pump()
+    assert sc.in_sync()
+    out = np.asarray(sc.lookup(keys))
+    np.testing.assert_array_equal(out, np.arange(200, dtype=np.uint32))
+    assert sc.routed_shortcut == 1
+
+
+def test_versions_monotone_and_gate(rng):
+    keys = unique_keys(rng, 300)
+    sc = ShortcutEH(max_global_depth=8, bucket_slots=16, capacity=256)
+    for i in range(0, 300, 100):
+        sc.insert(keys[i:i + 100],
+                  np.arange(i, i + 100, dtype=np.uint32))
+        trad, short = sc.versions()
+        assert short < trad
+        sc.pump()
+        trad, short = sc.versions()
+        assert short == trad
+
+
+def test_fan_in_routing(rng):
+    """High fan-in (few buckets, wide directory) must route traditional
+    (the TLB-thrashing lesson, §3.2)."""
+    keys = unique_keys(rng, 40)
+    sc = ShortcutEH(max_global_depth=8, bucket_slots=64, capacity=256,
+                    fan_in_threshold=8.0)
+    sc.insert(keys, np.arange(40, dtype=np.uint32))
+    sc.pump()
+    # force a wide directory by doubling manually: insert nothing more —
+    # instead check the routing rule directly on both regimes
+    if sc.avg_fan_in() <= 8.0:
+        assert sc.use_shortcut()
+    sc.fan_in_threshold = 0.5  # now even fan-in 1 is "too high"
+    if sc.avg_fan_in() > 0.5:
+        assert not sc.use_shortcut()
+        out = np.asarray(sc.lookup(keys))
+        np.testing.assert_array_equal(out, np.arange(40, dtype=np.uint32))
+
+
+def test_async_mapper_thread(rng):
+    keys = unique_keys(rng, 400)
+    with ShortcutEH(max_global_depth=8, bucket_slots=16, capacity=512,
+                    poll_interval=0.005, async_mapper=True) as sc:
+        for i in range(0, 400, 100):
+            sc.insert(keys[i:i + 100],
+                      np.arange(i, i + 100, dtype=np.uint32))
+        assert sc.wait_in_sync(timeout=30.0)
+        out = np.asarray(sc.lookup(keys))
+        np.testing.assert_array_equal(out, np.arange(400, dtype=np.uint32))
+        assert sc.stats.creates >= 1
+        assert sc.stats.populate_seconds >= 0.0
+
+
+def test_create_collapses_stale_updates(rng):
+    """A doubling enqueues a create request and pops outdated updates
+    (paper §4.1); correctness must hold regardless of interleaving."""
+    keys = unique_keys(rng, 600)
+    sc = ShortcutEH(max_global_depth=9, bucket_slots=8, capacity=1024)
+    for i in range(0, 600, 50):  # many small batches: splits + doublings
+        sc.insert(keys[i:i + 50], np.arange(i, i + 50, dtype=np.uint32))
+    sc.pump()
+    assert sc.in_sync()
+    out = np.asarray(sc.lookup(keys))
+    np.testing.assert_array_equal(out, np.arange(600, dtype=np.uint32))
+    report = eh.check_invariants(sc.state)
+    assert report["ok"], report["errors"]
