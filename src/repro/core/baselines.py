@@ -9,7 +9,8 @@
     over fixed 128 B buckets; overflow appends a bucket to the chain.
 
 All tables use the same multiplicative hash as the EH implementation
-(``extendible_hashing.hash_dir``), matching the paper's comparability setup.
+(``core/hashing.py``, the single home of the constants and the masked
+linear-probe primitives), matching the paper's comparability setup.
 Static maximum capacities + dynamic active sizes keep everything jittable.
 """
 from __future__ import annotations
@@ -20,29 +21,22 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.extendible_hashing import EMPTY_KEY, MISS, hash_dir
+from repro.core import hashing
+from repro.core.hashing import EMPTY_KEY, MISS, dir_slot, hash_dir
 
 _PROBE_WINDOW = 32  # static linear-probe window; ample for load <= 0.35
 
-
-def _slot_of(h: jax.Array, size_log2: jax.Array) -> jax.Array:
-    """Open-addressing home slot: top ``size_log2`` bits (MSB, as in EH)."""
-    s = size_log2.astype(jnp.uint32)
-    return jnp.where(s == 0, jnp.uint32(0),
-                     h >> (jnp.uint32(32) - s)).astype(jnp.int32)
+# Open-addressing home slot: top ``size_log2`` bits (MSB, as in EH).
+_slot_of = dir_slot
 
 
 def _probe_insert(keys, vals, key, value, size_log2):
     """Linear-probe insert into the active prefix [0, 2^size_log2).
 
     Returns (keys, vals, inserted_new, ok)."""
-    size = jnp.int32(1) << size_log2
-    home = _slot_of(hash_dir(key), size_log2)
-    pos = (home + jnp.arange(_PROBE_WINDOW, dtype=jnp.int32)) % size
-    probed = keys[pos]
-    usable = (probed == key.astype(jnp.uint32)) | (probed == EMPTY_KEY)
-    ok = jnp.any(usable)
-    idx = pos[jnp.argmax(usable)]
+    pos = hashing.window_positions(hash_dir(key), size_log2, _PROBE_WINDOW)
+    ok, j = hashing.probe_slot(keys[pos], key)
+    idx = pos[j]
     was_empty = keys[idx] == EMPTY_KEY
     keys = keys.at[idx].set(jnp.where(ok, key.astype(jnp.uint32), keys[idx]))
     vals = vals.at[idx].set(jnp.where(ok, value.astype(jnp.uint32), vals[idx]))
@@ -50,16 +44,9 @@ def _probe_insert(keys, vals, key, value, size_log2):
 
 
 def _probe_find(keys, vals, key, size_log2):
-    size = jnp.int32(1) << size_log2
-    home = _slot_of(hash_dir(key), size_log2)
-    pos = (home + jnp.arange(_PROBE_WINDOW, dtype=jnp.int32)) % size
-    probed = keys[pos]
-    hit = probed == key.astype(jnp.uint32)
-    empties = probed == EMPTY_KEY
-    before = jnp.cumsum(empties.astype(jnp.int32)) - empties.astype(jnp.int32)
-    live_hit = hit & (before == 0)
-    found = jnp.any(live_hit)
-    return jnp.where(found, vals[pos[jnp.argmax(live_hit)]], MISS)
+    pos = hashing.window_positions(hash_dir(key), size_log2, _PROBE_WINDOW)
+    found, j = hashing.probe_hit(keys[pos], key)
+    return jnp.where(found, vals[pos[j]], MISS)
 
 
 # ---------------------------------------------------------------------------

@@ -19,8 +19,10 @@ Layout (all arrays statically sized, validity tracked by scalars):
                         free ring instead).
 
 Hashing: the paper uses one "lightweight multiplicative hash" for the
-directory slot and a second one for the bucket slot; we use Knuth's golden
-ratio constants on uint32.
+directory slot and a second one for the bucket slot; the constants and
+probe primitives are shared with the kernels and baselines via
+``core/hashing.py`` (``hash_dir``/``hash_bucket``/``dir_slot`` are
+re-exported here for backwards compatibility).
 
 All mutating ops return a new state (functional); batched insertion is a
 ``lax.scan``, batched lookup a ``vmap``.
@@ -33,10 +35,9 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-EMPTY_KEY = jnp.uint32(0xFFFFFFFF)   # sentinel: slot unused
-MISS = jnp.uint32(0xFFFFFFFF)        # lookup miss marker
-_HASH_C1 = jnp.uint32(2654435761)    # Knuth multiplicative (directory)
-_HASH_C2 = jnp.uint32(0x9E3779B1)    # golden-ratio variant (bucket slot)
+from repro.core import hashing
+from repro.core.hashing import (EMPTY_KEY, MISS,  # noqa: F401  (re-export)
+                                dir_slot, hash_bucket, hash_dir)
 
 
 class EHState(NamedTuple):
@@ -62,25 +63,6 @@ class EHState(NamedTuple):
         return self.bucket_keys.shape[1]
 
 
-def hash_dir(key: jax.Array) -> jax.Array:
-    """Primary multiplicative hash; directory uses its most significant bits."""
-    return (key.astype(jnp.uint32) * _HASH_C1).astype(jnp.uint32)
-
-
-def hash_bucket(key: jax.Array) -> jax.Array:
-    """Secondary hash for the slot within a bucket."""
-    k = key.astype(jnp.uint32) * _HASH_C2
-    return (k ^ (k >> jnp.uint32(16))).astype(jnp.uint32)
-
-
-def dir_slot(h: jax.Array, global_depth: jax.Array) -> jax.Array:
-    """Most-significant-bit directory slot; depth 0 => single slot 0."""
-    g = global_depth.astype(jnp.uint32)
-    # uint32 >> 32 is undefined; guard depth 0.
-    return jnp.where(g == 0, jnp.uint32(0),
-                     h >> (jnp.uint32(32) - g)).astype(jnp.int32)
-
-
 def eh_create(max_global_depth: int, bucket_slots: int,
               capacity: int) -> EHState:
     """One empty bucket, one directory slot (the paper's 4 KB start state)."""
@@ -101,23 +83,11 @@ def eh_create(max_global_depth: int, bucket_slots: int,
 # Intra-bucket open addressing (vectorized probe, no loops).
 # ---------------------------------------------------------------------------
 
-def _probe_positions(key: jax.Array, bucket_slots: int) -> jax.Array:
-    start = hash_bucket(key) % jnp.uint32(bucket_slots)
-    return ((start + jnp.arange(bucket_slots, dtype=jnp.uint32))
-            % jnp.uint32(bucket_slots)).astype(jnp.int32)
-
-
 def bucket_find(keys_row: jax.Array, key: jax.Array) -> jax.Array:
     """Probe a bucket row; return slot index of ``key`` or -1."""
-    pos = _probe_positions(key, keys_row.shape[0])
-    probed = keys_row[pos]
-    hit = probed == key.astype(jnp.uint32)
-    # linear probing stops at the first EMPTY slot
-    empty_before = jnp.cumsum((probed == EMPTY_KEY).astype(jnp.int32)) \
-        - (probed == EMPTY_KEY).astype(jnp.int32)
-    live_hit = hit & (empty_before == 0)
-    found = jnp.any(live_hit)
-    return jnp.where(found, pos[jnp.argmax(live_hit)], -1)
+    pos = hashing.probe_positions(key, keys_row.shape[0])
+    found, j = hashing.probe_hit(keys_row[pos], key)
+    return jnp.where(found, pos[j], -1)
 
 
 def bucket_put(keys_row: jax.Array, vals_row: jax.Array, key: jax.Array,
@@ -128,13 +98,9 @@ def bucket_put(keys_row: jax.Array, vals_row: jax.Array, key: jax.Array,
       inserted_new -- 1 if a fresh slot was consumed (count must grow)
       ok           -- 0 if the bucket was full and key absent
     """
-    pos = _probe_positions(key, keys_row.shape[0])
-    probed = keys_row[pos]
-    is_match = probed == key.astype(jnp.uint32)
-    is_empty = probed == EMPTY_KEY
-    usable = is_match | is_empty
-    ok = jnp.any(usable)
-    idx = pos[jnp.argmax(usable)]
+    pos = hashing.probe_positions(key, keys_row.shape[0])
+    ok, j = hashing.probe_slot(keys_row[pos], key)
+    idx = pos[j]
     was_empty = keys_row[idx] == EMPTY_KEY
     keys_row = keys_row.at[idx].set(
         jnp.where(ok, key.astype(jnp.uint32), keys_row[idx]))
@@ -362,13 +328,13 @@ def check_invariants(st: EHState) -> dict:
             fail(f"I2: bucket {b} slots not contiguous")
     keys = np.asarray(st.bucket_keys[:nb])
     counts = np.asarray(st.counts[:nb])
-    live = keys != np.uint32(0xFFFFFFFF)
+    live = keys != np.uint32(hashing.EMPTY_SENTINEL)
     if not (live.sum(axis=1) == counts).all():
         fail("I5: counts mismatch")
     for b in range(nb):
         for k in keys[b][live[b]]:
-            h = (np.uint64(k) * np.uint64(2654435761)) & np.uint64(0xFFFFFFFF)
-            slot = int(h >> np.uint64(32 - g)) if g > 0 else 0
+            h = hashing.hash_dir_host(int(k))
+            slot = h >> (32 - g) if g > 0 else 0
             if int(directory[slot]) != b:
                 fail(f"I4: key {k} misplaced (bucket {b}, slot {slot})")
     return out

@@ -1,0 +1,113 @@
+"""Shared hashing and probing primitives (single source of truth).
+
+The paper uses one "lightweight multiplicative hash" for the directory
+slot and a second one for the slot within a bucket (§4); the same pair —
+Knuth's golden-ratio constants on uint32 — is used by every structure in
+this repo for comparability (§4.2).  Before this module existed the
+constants and the masked linear-probe logic were duplicated across the
+XLA core (``core/extendible_hashing.py``), the Pallas kernels
+(``kernels/eh_lookup.py``) and the baselines (``core/baselines.py``);
+they now live here and *only* here.
+
+Two flavours of each constant are exported:
+
+  * plain Python ints (``HASH_C1`` …) — safe to close over inside Pallas
+    kernels (a module-level traced constant would be captured by the
+    kernel, which Pallas forbids); cast at use sites.
+  * ``jnp.uint32`` values (``EMPTY_KEY``, ``MISS``) for the XLA paths.
+
+Probing follows the paper's evaluation setup: open addressing / linear
+probing with the *first-empty-slot-terminates* rule — a hit after an
+empty slot is a ghost from a different probe chain and must be ignored.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# -- the constants (defined here and nowhere else) ---------------------------
+
+HASH_C1: int = 2654435761          # Knuth multiplicative (directory hash)
+HASH_C2: int = 0x9E3779B1          # golden-ratio variant (bucket-slot hash)
+EMPTY_SENTINEL: int = 0xFFFFFFFF   # slot unused (python int, kernel-safe)
+MISS_SENTINEL: int = 0xFFFFFFFF    # lookup miss marker (python int)
+
+EMPTY_KEY = jnp.uint32(EMPTY_SENTINEL)
+MISS = jnp.uint32(MISS_SENTINEL)
+
+
+# -- hashes ------------------------------------------------------------------
+
+def hash_dir(key: jnp.ndarray) -> jnp.ndarray:
+    """Primary multiplicative hash; directories use its most significant
+    bits (the precondition for contiguous fan-in ranges, §4.1)."""
+    return (key.astype(jnp.uint32) * jnp.uint32(HASH_C1)).astype(jnp.uint32)
+
+
+def hash_bucket(key: jnp.ndarray) -> jnp.ndarray:
+    """Secondary hash for the slot within a bucket page."""
+    k = key.astype(jnp.uint32) * jnp.uint32(HASH_C2)
+    return (k ^ (k >> jnp.uint32(16))).astype(jnp.uint32)
+
+
+def hash_dir_host(key: int) -> int:
+    """Host-side (numpy-free) twin of :func:`hash_dir` for invariant
+    checks and host-built views."""
+    return (int(key) * HASH_C1) & 0xFFFFFFFF
+
+
+def dir_slot(h: jnp.ndarray, depth: jnp.ndarray) -> jnp.ndarray:
+    """Most-significant-bit slot of hash ``h`` in a table of ``2**depth``
+    entries; depth 0 => single slot 0.  (uint32 >> 32 is undefined, so
+    depth 0 is guarded.)"""
+    d = depth.astype(jnp.uint32) if hasattr(depth, "astype") \
+        else jnp.uint32(depth)
+    return jnp.where(d == jnp.uint32(0), jnp.uint32(0),
+                     h >> (jnp.uint32(32) - d)).astype(jnp.int32)
+
+
+# -- probe-sequence generators ----------------------------------------------
+
+def probe_positions(key: jnp.ndarray, slots: int) -> jnp.ndarray:
+    """Full cyclic probe sequence over a bucket row of ``slots`` entries,
+    starting at the secondary hash."""
+    start = hash_bucket(key) % jnp.uint32(slots)
+    return ((start + jnp.arange(slots, dtype=jnp.uint32))
+            % jnp.uint32(slots)).astype(jnp.int32)
+
+
+def window_positions(h: jnp.ndarray, size_log2: jnp.ndarray,
+                     window: int) -> jnp.ndarray:
+    """Linear probe window of ``window`` slots from the home slot of
+    hash ``h`` in an active table prefix of ``2**size_log2`` entries."""
+    size = jnp.int32(1) << size_log2
+    home = dir_slot(h, size_log2)
+    return (home + jnp.arange(window, dtype=jnp.int32)) % size
+
+
+# -- masked probes (the duplicated core, now shared) -------------------------
+
+def probe_hit(probed: jnp.ndarray, key: jnp.ndarray):
+    """Find ``key`` in the probed key sequence.
+
+    Returns ``(found, idx)`` where ``idx`` indexes *into the probe
+    sequence*; a hit after the first EMPTY slot is ignored (linear
+    probing terminates at the first empty slot)."""
+    hit = probed == key.astype(jnp.uint32)
+    # sentinel built at use site: these helpers trace inside Pallas
+    # kernels, where closing over a module-level concrete array is an
+    # illegal captured constant
+    empties = probed == jnp.uint32(EMPTY_SENTINEL)
+    before = jnp.cumsum(empties.astype(jnp.int32)) - empties.astype(jnp.int32)
+    live = hit & (before == 0)
+    return jnp.any(live), jnp.argmax(live)
+
+
+def probe_slot(probed: jnp.ndarray, key: jnp.ndarray):
+    """Find the insert slot for ``key``: the first position that either
+    already holds ``key`` (overwrite) or is EMPTY.
+
+    Returns ``(ok, idx)`` with ``idx`` into the probe sequence; ``ok`` is
+    False when the probed window is full and the key absent."""
+    usable = (probed == key.astype(jnp.uint32)) \
+        | (probed == jnp.uint32(EMPTY_SENTINEL))
+    return jnp.any(usable), jnp.argmax(usable)

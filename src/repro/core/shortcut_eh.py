@@ -4,22 +4,23 @@ maintained shortcut directory (paper §4.1).
 Architecture (faithful to the paper):
 
   * The *traditional* directory (``EHState``) is authoritative; every
-    modification is applied to it synchronously and bumps ``trad_version``.
-  * A concurrent FIFO queue carries maintenance requests to a *mapper*
-    thread polling at a fixed interval (paper: 25 ms):
-      - ``update`` requests after bucket splits / content changes, carrying
-        the touched slots;
-      - ``create`` requests after a directory doubling (the shortcut is
-        rebuilt from scratch; pending updates are popped as outdated).
-  * The mapper replays requests against the *shortcut view* (the composed
-    ``view[i] = buckets[directory[i]]`` of ``rewiring.compose``), then
-    eagerly "populates" it (``block_until_ready`` — the page-table
-    population analogue) before publishing ``sc_version``.
-  * Lookups route through the shortcut only when it is in sync
-    (``sc_version == trad_version``) *and* the average fan-in is at most
-    ``fan_in_threshold`` (paper: 8) — below that the TLB-thrashing analogue
-    (a virtual footprint of 2^g pages vs 2^g pointers + m pages) makes the
-    traditional path cheaper.
+    modification is applied to it synchronously and bumps the traditional
+    version.
+  * Maintenance — the FIFO request queue, the polling mapper thread (paper:
+    25 ms) / synchronous ``pump()``, create-collapses-older-updates
+    batching, eager ``block_until_ready`` population, version gating and
+    fan-in routing — is the *generic* shortcut-maintenance runtime
+    (``runtime/mapper.ShortcutMapper``, DESIGN.md §4).  This class supplies
+    only the two replay callables:
+      - ``update`` replay remaps the view slots of touched buckets
+        (``rewiring.remap_slots``);
+      - ``create`` replay rebuilds the whole view after a directory
+        doubling (``extendible_hashing.compose_shortcut``).
+  * Lookups route through the shortcut only when it is in sync *and* the
+    average fan-in is at most ``fan_in_threshold`` (paper: 8) — below that
+    the TLB-thrashing analogue (a virtual footprint of 2^g pages vs 2^g
+    pointers + m pages) makes the traditional path cheaper
+    (:class:`~repro.runtime.mapper.FanInRouting`).
 
 Delta vs the paper (see DESIGN.md §2): the paper's shortcut *shares*
 physical pages, so ordinary in-bucket inserts are instantly visible through
@@ -29,10 +30,6 @@ The asynchronous, version-gated architecture is unchanged.
 """
 from __future__ import annotations
 
-import queue
-import threading
-import time
-from dataclasses import dataclass, field
 from typing import Optional
 
 import jax
@@ -41,6 +38,10 @@ import numpy as np
 
 from repro.core import extendible_hashing as eh
 from repro.core import rewiring
+from repro.runtime.mapper import (GLOBAL_VIEW, FanInRouting,
+                                  MaintenanceStats, ShortcutMapper)
+
+__all__ = ["ShortcutEH", "MaintenanceStats"]
 
 
 def _next_pow2(n: int) -> int:
@@ -58,51 +59,66 @@ def _pad_chunk(n: int) -> int:
     return _CHUNK_SIZES[-1]
 
 
-@dataclass
-class _Request:
-    kind: str            # "create" | "update"
-    version: int         # trad_version this request brings the shortcut to
-    touched: Optional[np.ndarray] = None  # bucket ids (update only)
-
-
-@dataclass
-class MaintenanceStats:
-    creates: int = 0
-    updates: int = 0
-    slots_remapped: int = 0
-    replay_seconds: float = 0.0
-    populate_seconds: float = 0.0
-
-
 class ShortcutEH:
-    """Host-side orchestration of the traditional + shortcut directories.
+    """Thin client of the shortcut-maintenance runtime for the EH index.
 
     ``async_mapper=True`` runs the paper's mapper thread; tests and
     deterministic benchmarks use ``async_mapper=False`` + :meth:`pump`.
+    A custom ``routing`` policy (e.g.
+    :class:`~repro.runtime.mapper.HysteresisRouting`) may replace the
+    default fan-in threshold rule.
     """
 
     def __init__(self, max_global_depth: int, bucket_slots: int,
                  capacity: int, *, fan_in_threshold: float = 8.0,
-                 poll_interval: float = 0.025, async_mapper: bool = False):
+                 poll_interval: float = 0.025, async_mapper: bool = False,
+                 routing=None):
         self.state = eh.eh_create(max_global_depth, bucket_slots, capacity)
-        self.fan_in_threshold = float(fan_in_threshold)
-        self.poll_interval = float(poll_interval)
-        self.trad_version = 0
-        self.sc_version = -1
         self.view_keys: Optional[jax.Array] = None
         self.view_vals: Optional[jax.Array] = None
         self.view_log2 = -1
-        self.stats = MaintenanceStats()
-        self.routed_shortcut = 0
-        self.routed_traditional = 0
-        self._queue: "queue.SimpleQueue[_Request]" = queue.SimpleQueue()
-        self._lock = threading.Lock()
-        self._stop = threading.Event()
-        self._mapper: Optional[threading.Thread] = None
-        if async_mapper:
-            self._mapper = threading.Thread(
-                target=self._mapper_loop, daemon=True, name="eh-mapper")
-            self._mapper.start()
+        self.mapper = ShortcutMapper(
+            replay_create=self._replay_create,
+            replay_update=self._replay_update,
+            snapshot=lambda: self.state,
+            view_arrays=self._view_arrays,
+            routing=routing or FanInRouting(float(fan_in_threshold)),
+            poll_interval=poll_interval, async_mapper=async_mapper,
+            name="eh-mapper")
+
+    # -- delegated bookkeeping (kept for API compatibility) ------------------
+
+    @property
+    def stats(self) -> MaintenanceStats:
+        return self.mapper.stats
+
+    @property
+    def routed_shortcut(self) -> int:
+        return self.mapper.routed_shortcut
+
+    @property
+    def routed_traditional(self) -> int:
+        return self.mapper.routed_fallback
+
+    @property
+    def trad_version(self) -> int:
+        return self.mapper.trad_version(GLOBAL_VIEW)
+
+    @property
+    def sc_version(self) -> int:
+        return self.mapper.sc_version(GLOBAL_VIEW)
+
+    @property
+    def fan_in_threshold(self):
+        return self.mapper.threshold
+
+    @fan_in_threshold.setter
+    def fan_in_threshold(self, value: float) -> None:
+        self.mapper.threshold = value
+
+    @property
+    def poll_interval(self) -> float:
+        return self.mapper.poll_interval
 
     # -- main-thread API ----------------------------------------------------
 
@@ -112,130 +128,71 @@ class ShortcutEH:
         keys = jnp.asarray(keys, jnp.uint32)
         values = jnp.asarray(values, jnp.uint32)
         old_g = int(self.state.global_depth)
-        with self._lock:
+        with self.mapper.lock:
             self.state = eh.eh_insert_many(self.state, keys, values)
             new_g = int(self.state.global_depth)
-            self.trad_version += 1
-            version = self.trad_version
+            versions = self.mapper.record([GLOBAL_VIEW])
         if new_g != old_g:
-            # doubling: outdated updates are popped before the create request
-            self._drain_queue()
-            self._queue.put(_Request("create", version))
+            # doubling: the runtime pops outdated updates before the create
+            self.mapper.submit_create([GLOBAL_VIEW], versions)
         else:
             slots = eh.dir_slot(eh.hash_dir(keys), self.state.global_depth)
             touched = np.unique(np.asarray(self.state.directory[slots]))
-            self._queue.put(_Request("update", version, touched))
+            self.mapper.submit_update([GLOBAL_VIEW], versions,
+                                      payload=touched)
 
     def lookup(self, keys) -> jax.Array:
         """Route through the shortcut when in sync and fan-in permits."""
         keys = jnp.asarray(keys, jnp.uint32)
-        if self.use_shortcut():
-            self.routed_shortcut += 1
+        use = self.use_shortcut()
+        self.mapper.count_route(use)
+        if use:
             return eh.shortcut_lookup_many(
                 self.view_keys, self.view_vals,
                 self.state.global_depth, keys)
-        self.routed_traditional += 1
         return eh.eh_lookup_many(self.state, keys)
 
     def use_shortcut(self) -> bool:
-        return (self.in_sync()
-                and self.view_keys is not None
-                and self.avg_fan_in() <= self.fan_in_threshold)
+        return (self.view_keys is not None
+                and self.mapper.gate(self.avg_fan_in(), [GLOBAL_VIEW]))
 
     def in_sync(self) -> bool:
-        return self.sc_version == self.trad_version
+        return self.mapper.in_sync([GLOBAL_VIEW])
 
     def avg_fan_in(self) -> float:
         return float((1 << int(self.state.global_depth))
                      / max(1, int(self.state.num_buckets)))
 
     def versions(self) -> tuple[int, int]:
-        return self.trad_version, self.sc_version
+        return self.mapper.versions(GLOBAL_VIEW)
 
     def pump(self, max_requests: int = 1 << 30) -> int:
         """Synchronously process pending maintenance (mapper surrogate)."""
-        done = 0
-        while done < max_requests:
-            batch = self._drain_queue()
-            if not batch:
-                break
-            self._process(batch)
-            done += len(batch)
-        return done
+        return self.mapper.pump(max_requests)
 
     def wait_in_sync(self, timeout: float = 30.0) -> bool:
         """Block until the shortcut caught up (async mode)."""
-        deadline = time.monotonic() + timeout
-        while time.monotonic() < deadline:
-            if self.in_sync() and self._queue.empty():
-                return True
-            if self._mapper is None:
-                self.pump()
-            else:
-                time.sleep(self.poll_interval / 4)
-        return self.in_sync()
+        return self.mapper.wait_in_sync([GLOBAL_VIEW], timeout)
 
     def close(self) -> None:
-        self._stop.set()
-        if self._mapper is not None:
-            self._mapper.join(timeout=5.0)
-            self._mapper = None
+        self.mapper.close()
 
-    # -- mapper side ---------------------------------------------------------
+    # -- replay callables (the only EH-specific maintenance code) ------------
 
-    def _drain_queue(self) -> list[_Request]:
-        out = []
-        while True:
-            try:
-                out.append(self._queue.get_nowait())
-            except queue.Empty:
-                return out
+    def _view_arrays(self):
+        if self.view_keys is None:
+            return ()
+        return (self.view_keys, self.view_vals)
 
-    def _mapper_loop(self) -> None:
-        """The paper's mapper thread: poll at a fixed frequency, replay."""
-        while not self._stop.is_set():
-            batch = self._drain_queue()
-            if batch:
-                self._process(batch)
-            else:
-                time.sleep(self.poll_interval)
-
-    def _process(self, batch: list[_Request]) -> None:
-        """Replay a drained batch: newest create collapses older updates."""
-        creates = [r for r in batch if r.kind == "create"]
-        last_create_v = max((r.version for r in creates), default=-1)
-        updates = [r for r in batch
-                   if r.kind == "update" and r.version > last_create_v]
-        target_version = max(r.version for r in batch)
-
-        with self._lock:
-            st = self.state
-        t0 = time.perf_counter()
-        if creates or self.view_keys is None:
-            self._replay_create(st)
-        if updates:
-            touched = np.unique(np.concatenate([u.touched for u in updates]))
-            self._replay_update(st, touched)
-        t1 = time.perf_counter()
-        # Eager page-table population (paper §3.1): make sure no lookup pays
-        # the first-touch cost.
-        self.view_keys.block_until_ready()
-        self.view_vals.block_until_ready()
-        t2 = time.perf_counter()
-        self.stats.replay_seconds += t1 - t0
-        self.stats.populate_seconds += t2 - t1
-        self.sc_version = max(self.sc_version, target_version)
-
-    def _replay_create(self, st: eh.EHState) -> None:
+    def _replay_create(self, st: eh.EHState, requests) -> None:
         g = int(st.global_depth)
         view_slots = _next_pow2(1 << g)
         self.view_keys, self.view_vals = eh.compose_shortcut(st, view_slots)
         self.view_log2 = view_slots.bit_length() - 1
-        self.stats.creates += 1
-        self.stats.slots_remapped += view_slots
+        self.mapper.stats.slots_remapped += view_slots
 
-    def _replay_update(self, st: eh.EHState, touched: np.ndarray) -> None:
-        """Remap every view slot whose bucket is in ``touched``.
+    def _replay_update(self, st: eh.EHState, requests) -> None:
+        """Remap every view slot whose bucket is in the merged touched set.
 
         Host-side slot discovery (the mapper owns this cost, per §3.3), then
         a padded device scatter — ``rewiring.remap_slots`` is the per-slot
@@ -243,6 +200,12 @@ class ShortcutEH:
         own current bucket (a no-op), mirroring the paper's coalescing of
         neighbouring remaps into fewer calls.
         """
+        if self.view_keys is None:
+            # the composed view already reflects the snapshot (and thus
+            # these updates); remapping on top would be duplicate work
+            self._replay_create(st, requests)
+            return
+        touched = np.unique(np.concatenate([r.payload for r in requests]))
         g = int(st.global_depth)
         dir_np = np.asarray(st.directory[: 1 << g])
         stale = np.isin(dir_np, touched)
@@ -257,8 +220,7 @@ class ShortcutEH:
             self.view_keys, st.bucket_keys, slots_p, offsets_p)
         self.view_vals = rewiring.remap_slots(
             self.view_vals, st.bucket_vals, slots_p, offsets_p)
-        self.stats.updates += 1
-        self.stats.slots_remapped += int(slots.size)
+        self.mapper.stats.slots_remapped += int(slots.size)
 
     def __enter__(self):
         return self

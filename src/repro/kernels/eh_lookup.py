@@ -29,39 +29,31 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-# python ints (NOT jnp scalars: a traced module-level constant would be
-# captured by the kernel, which pallas forbids); cast at use sites
-EMPTY_KEY = 0xFFFFFFFF
-MISS = 0xFFFFFFFF
-_C1 = 2654435761
-_C2 = 0x9E3779B1
+from repro.core import hashing
+
+# hashing.HASH_C1/C2 and the sentinels are python ints (NOT jnp scalars: a
+# traced module-level constant would be captured by the kernel, which
+# pallas forbids); cast at use sites.  Local aliases for readability.
+EMPTY_KEY = hashing.EMPTY_SENTINEL
+MISS = hashing.MISS_SENTINEL
 
 
 def _probe_row(row_k, row_v, key, slots: int):
-    """Vectorized linear probe of one bucket row (slots,)->value or MISS."""
-    kk = key.astype(jnp.uint32) * jnp.uint32(_C2)
-    start = (kk ^ (kk >> jnp.uint32(16))) % jnp.uint32(slots)
-    pos = ((start + jnp.arange(slots, dtype=jnp.uint32))
-           % jnp.uint32(slots)).astype(jnp.int32)
-    probed = row_k[pos]
-    hit = probed == key
-    empties = probed == jnp.uint32(EMPTY_KEY)
-    before = jnp.cumsum(empties.astype(jnp.int32)) \
-        - empties.astype(jnp.int32)
-    live = hit & (before == 0)
-    found = jnp.any(live)
-    return jnp.where(found, row_v[pos[jnp.argmax(live)]],
-                     jnp.uint32(MISS))
+    """Vectorized linear probe of one bucket row (slots,)->value or MISS.
+
+    Same masked-probe core as the XLA path (``hashing.probe_hit``); the
+    helpers trace cleanly inside the kernel because they only use
+    elementwise/cumsum/argmax ops the VPU supports."""
+    pos = hashing.probe_positions(key, slots)
+    found, j = hashing.probe_hit(row_k[pos], key)
+    return jnp.where(found, row_v[pos[j]], jnp.uint32(MISS))
 
 
 def _lookup_kernel(gd_ref, keys_ref, dir_ref, bk_ref, bv_ref, out_ref, *,
                    tile: int, slots: int, two_level: bool):
     g = gd_ref[0]
     keys = keys_ref[...]
-    h = keys * jnp.uint32(_C1)
-    slot = jnp.where(
-        g == 0, jnp.uint32(0),
-        h >> (jnp.uint32(32) - g.astype(jnp.uint32))).astype(jnp.int32)
+    slot = hashing.dir_slot(hashing.hash_dir(keys), g)
 
     def body(i, _):
         key = keys[i]

@@ -7,18 +7,17 @@ per-sequence layout — ``view[l, s, t] = pool[l, table[s, t // bs], t % bs]``
 zero data-dependent indirections.  This is ``rewiring.compose`` at the KV
 granularity.
 
-Exactly like Shortcut-EH (§4.1): the paged cache stays authoritative and
-synchronous; the view is replayed asynchronously from a FIFO of *update*
-(append a token row) and *create* (re-linearize a sequence) requests, is
-eagerly populated before publication, version-gates every read, and a
-fragmentation statistic (the fan-in analogue) decides routing.
+Exactly like Shortcut-EH (§4.1) — and through the very same runtime
+(``runtime/mapper.ShortcutMapper``, DESIGN.md §4): the paged cache stays
+authoritative and synchronous; the view is replayed asynchronously from a
+FIFO of *update* (append a token row) and *create* (re-linearize a
+sequence) requests, is eagerly populated before publication, version-gates
+every read (one version per sequence — a sequence is our directory unit),
+and a fragmentation statistic (the fan-in analogue) decides routing
+(:class:`~repro.runtime.mapper.FragmentationRouting`).
 """
 from __future__ import annotations
 
-import queue
-import threading
-import time
-from dataclasses import dataclass
 from typing import Optional
 
 import jax
@@ -26,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kvcache import paged_cache as pc
+from repro.runtime.mapper import FragmentationRouting, ShortcutMapper
 
 
 # -- functional core -----------------------------------------------------------
@@ -69,175 +69,144 @@ def slice_context(view_k: jax.Array, view_v: jax.Array, seq_ids: jax.Array):
 
 # -- host orchestration ----------------------------------------------------------
 
-@dataclass
-class _Request:
-    kind: str                      # "append" | "create"
-    versions: np.ndarray           # per-seq trad_version at request time
-    seq_ids: np.ndarray
-    positions: Optional[np.ndarray] = None
-    new_k: Optional[jax.Array] = None
-    new_v: Optional[jax.Array] = None
-
-
 class ShortcutKVManager:
-    """Maintains the shortcut view alongside an authoritative paged cache.
+    """Maintains the shortcut view alongside an authoritative paged cache —
+    a thin client of the shortcut-maintenance runtime.
 
-    Per-sequence version numbers (the paper keeps one per directory; a
-    sequence is our directory unit): a read routes through the shortcut only
-    when every sequence in the batch is in sync *and* the batch
-    fragmentation exceeds ``frag_threshold`` (below it, the paged gather
-    streams nearly-contiguous blocks anyway, and maintenance would be pure
+    A read routes through the shortcut only when every sequence in the
+    batch is in sync *and* the batch fragmentation exceeds
+    ``frag_threshold`` (below it, the paged gather streams
+    nearly-contiguous blocks anyway, and maintenance would be pure
     overhead — the TLB-thrashing lesson of §3.2 mapped to DMA terms).
     """
 
     def __init__(self, cache: pc.PagedKVCache, seq_capacity: int, *,
                  frag_threshold: float = 0.25, poll_interval: float = 0.025,
-                 async_mapper: bool = False):
+                 async_mapper: bool = False, routing=None):
         L, _, bs, KV, hd = cache.k_pool.shape
         max_seqs = cache.block_tables.shape[0]
         self.cache = cache
         self.view_k = jnp.zeros((L, max_seqs, seq_capacity, KV, hd),
                                 cache.k_pool.dtype)
         self.view_v = jnp.zeros_like(self.view_k)
-        self.frag_threshold = float(frag_threshold)
-        self.poll_interval = float(poll_interval)
-        self.trad_version = np.zeros((max_seqs,), np.int64)
-        self.sc_version = np.full((max_seqs,), -1, np.int64)
-        self.routed_shortcut = 0
-        self.routed_paged = 0
-        self._queue: "queue.SimpleQueue[_Request]" = queue.SimpleQueue()
-        self._lock = threading.Lock()
-        self._stop = threading.Event()
-        self._mapper: Optional[threading.Thread] = None
-        if async_mapper:
-            self._mapper = threading.Thread(
-                target=self._mapper_loop, daemon=True, name="kv-mapper")
-            self._mapper.start()
+        self.mapper = ShortcutMapper(
+            replay_create=self._replay_create,
+            replay_update=self._replay_update,
+            snapshot=lambda: self.cache,
+            view_arrays=lambda: (self.view_k, self.view_v),
+            routing=routing or FragmentationRouting(float(frag_threshold)),
+            poll_interval=poll_interval, async_mapper=async_mapper,
+            name="kv-mapper")
+
+    # -- delegated bookkeeping (kept for API compatibility) ------------------
+
+    @property
+    def routed_shortcut(self) -> int:
+        return self.mapper.routed_shortcut
+
+    @property
+    def routed_paged(self) -> int:
+        return self.mapper.routed_fallback
+
+    @property
+    def frag_threshold(self):
+        return self.mapper.threshold
+
+    @frag_threshold.setter
+    def frag_threshold(self, value: float) -> None:
+        self.mapper.threshold = value
+
+    @property
+    def stats(self):
+        return self.mapper.stats
 
     # -- main-thread (serving) API -----------------------------------------
 
     def prefill(self, seq_ids: np.ndarray, k: jax.Array, v: jax.Array):
         """Synchronous paged write + async create request per sequence."""
-        with self._lock:
+        keys = [int(s) for s in np.asarray(seq_ids)]
+        with self.mapper.lock:
             self.cache = pc.write_prefill(
                 self.cache, jnp.asarray(seq_ids), k, v)
-            self.trad_version[seq_ids] += 1
-            vers = self.trad_version[seq_ids].copy()
-        self._queue.put(_Request("create", vers, np.asarray(seq_ids)))
+            versions = self.mapper.record(keys)
+        self.mapper.submit_create(keys, versions,
+                                  payload=np.asarray(seq_ids))
 
     def append(self, seq_ids: np.ndarray, new_k: jax.Array,
                new_v: jax.Array):
         """Synchronous paged append + async view-row update request."""
+        seq_ids = np.asarray(seq_ids)
+        keys = [int(s) for s in seq_ids]
         positions = np.asarray(self.cache.seq_lens)[seq_ids]
-        with self._lock:
+        with self.mapper.lock:
             self.cache = pc.append_tokens(
                 self.cache, jnp.asarray(seq_ids), new_k, new_v)
-            self.trad_version[seq_ids] += 1
-            vers = self.trad_version[seq_ids].copy()
-        self._queue.put(_Request(
-            "append", vers, np.asarray(seq_ids),
-            positions=positions, new_k=new_k, new_v=new_v))
+            versions = self.mapper.record(keys)
+        self.mapper.submit_update(
+            keys, versions, payload=(seq_ids, positions, new_k, new_v))
 
     def release(self, seq_ids: np.ndarray):
-        with self._lock:
+        """Synchronous release; the per-sequence views become permanently
+        stale until the next prefill recreates them."""
+        with self.mapper.lock:
             self.cache = pc.release_seqs(self.cache, jnp.asarray(seq_ids))
-            self.trad_version[seq_ids] += 1
-            self.sc_version[seq_ids] = -1
+            self.mapper.invalidate([int(s) for s in np.asarray(seq_ids)])
 
     def in_sync(self, seq_ids: np.ndarray) -> bool:
-        return bool((self.sc_version[seq_ids]
-                     >= self.trad_version[seq_ids]).all())
+        return self.mapper.in_sync(int(s) for s in np.asarray(seq_ids))
 
     def fragmentation(self, seq_ids: np.ndarray) -> float:
         return float(pc.fragmentation(self.cache, jnp.asarray(seq_ids)))
 
     def route(self, seq_ids: np.ndarray) -> str:
         """'shortcut' | 'paged' — version gate + fragmentation cost model."""
-        if self.in_sync(seq_ids) \
-                and self.fragmentation(seq_ids) >= self.frag_threshold:
+        if self.mapper.gate(self.fragmentation(seq_ids),
+                            (int(s) for s in np.asarray(seq_ids))):
             return "shortcut"
         return "paged"
 
     def get_context(self, seq_ids: np.ndarray, route: Optional[str] = None):
         """Materialized (k_ctx, v_ctx) for decode + the route taken."""
         route = route or self.route(seq_ids)
+        self.mapper.count_route(route == "shortcut")
         ids = jnp.asarray(seq_ids)
         if route == "shortcut":
-            self.routed_shortcut += 1
             k, v = slice_context(self.view_k, self.view_v, ids)
         else:
-            self.routed_paged += 1
             k, v = pc.gather_context(self.cache, ids)
         return k, v, route
 
     def seq_lens(self, seq_ids: np.ndarray) -> np.ndarray:
         return np.asarray(self.cache.seq_lens)[seq_ids]
 
-    # -- mapper -------------------------------------------------------------
+    # -- maintenance (delegated to the runtime) ------------------------------
 
     def pump(self) -> int:
-        done = 0
-        while True:
-            batch = self._drain()
-            if not batch:
-                return done
-            self._process(batch)
-            done += len(batch)
+        return self.mapper.pump()
 
     def wait_in_sync(self, seq_ids: np.ndarray, timeout: float = 30.0):
-        deadline = time.monotonic() + timeout
-        while time.monotonic() < deadline:
-            if self.in_sync(seq_ids) and self._queue.empty():
-                return True
-            if self._mapper is None:
-                self.pump()
-            else:
-                time.sleep(self.poll_interval / 4)
-        return self.in_sync(seq_ids)
+        return self.mapper.wait_in_sync(
+            [int(s) for s in np.asarray(seq_ids)], timeout)
 
     def close(self):
-        self._stop.set()
-        if self._mapper is not None:
-            self._mapper.join(timeout=5.0)
-            self._mapper = None
+        self.mapper.close()
 
-    def _drain(self) -> list[_Request]:
-        out = []
-        while True:
-            try:
-                out.append(self._queue.get_nowait())
-            except queue.Empty:
-                return out
+    # -- replay callables (the only KV-specific maintenance code) ------------
 
-    def _mapper_loop(self):
-        while not self._stop.is_set():
-            batch = self._drain()
-            if batch:
-                self._process(batch)
-            else:
-                time.sleep(self.poll_interval)
+    def _replay_create(self, cache: pc.PagedKVCache, requests) -> None:
+        for r in requests:
+            for s in np.asarray(r.payload):
+                self.view_k, self.view_v = compose_seq(
+                    cache, self.view_k, self.view_v, jnp.int32(int(s)))
+            self.mapper.stats.slots_remapped += len(r.versions)
 
-    def _process(self, batch: list[_Request]):
-        with self._lock:
-            cache = self.cache
-        latest: dict[int, int] = {}
-        for r in batch:
-            if r.kind == "create":
-                for s, ver in zip(r.seq_ids, r.versions):
-                    self.view_k, self.view_v = compose_seq(
-                        cache, self.view_k, self.view_v, jnp.int32(int(s)))
-                    latest[int(s)] = max(latest.get(int(s), -1), int(ver))
-            else:
-                self.view_k, self.view_v = append_to_view(
-                    self.view_k, self.view_v, jnp.asarray(r.seq_ids),
-                    jnp.asarray(r.positions), r.new_k, r.new_v)
-                for s, ver in zip(r.seq_ids, r.versions):
-                    latest[int(s)] = max(latest.get(int(s), -1), int(ver))
-        # eager population before publishing versions (§3.1)
-        self.view_k.block_until_ready()
-        self.view_v.block_until_ready()
-        for s, ver in latest.items():
-            self.sc_version[s] = max(self.sc_version[s], ver)
+    def _replay_update(self, cache: pc.PagedKVCache, requests) -> None:
+        for r in requests:
+            seq_ids, positions, new_k, new_v = r.payload
+            self.view_k, self.view_v = append_to_view(
+                self.view_k, self.view_v, jnp.asarray(seq_ids),
+                jnp.asarray(positions), new_k, new_v)
+            self.mapper.stats.slots_remapped += len(r.versions)
 
     def __enter__(self):
         return self

@@ -1,3 +1,30 @@
-from repro.runtime.train import TrainStep, make_train_step  # noqa: F401
-from repro.runtime.serve import (  # noqa: F401
-    DecodeState, decode_state_specs, make_prefill_step, make_serve_step)
+"""Runtime package: the shortcut-maintenance runtime plus the train/serve
+step factories.
+
+The train/serve exports are resolved lazily (PEP 562): the maintenance
+runtime (``repro.runtime.mapper``) is imported by the core index and the
+KV cache, and must not drag the full model stack (and its import cost)
+into every index user — nor create a cycle through ``repro.kvcache``.
+"""
+from repro.runtime.mapper import (  # noqa: F401
+    GLOBAL_VIEW, FanInRouting, FragmentationRouting, HysteresisRouting,
+    MaintenanceStats, Request, ShortcutMapper)
+
+_LAZY = {
+    "TrainStep": ("repro.runtime.train", "TrainStep"),
+    "make_train_step": ("repro.runtime.train", "make_train_step"),
+    "DecodeState": ("repro.runtime.serve", "DecodeState"),
+    "decode_state_specs": ("repro.runtime.serve", "decode_state_specs"),
+    "make_prefill_step": ("repro.runtime.serve", "make_prefill_step"),
+    "make_serve_step": ("repro.runtime.serve", "make_serve_step"),
+}
+
+
+def __getattr__(name):
+    try:
+        mod_name, attr = _LAZY[name]
+    except KeyError:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}") from None
+    import importlib
+    return getattr(importlib.import_module(mod_name), attr)

@@ -3,6 +3,7 @@ property tests, and the shortcut-view equivalence (paper §2/§4)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional dep: skip, never hard-fail
 from hypothesis import given, settings, strategies as st
 
 from repro.core import extendible_hashing as eh

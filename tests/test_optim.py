@@ -3,6 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional dep: skip, never hard-fail
 from hypothesis import given, settings, strategies as st
 
 from repro.optim.adamw import adamw_init, adamw_update, global_norm

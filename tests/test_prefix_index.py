@@ -74,3 +74,79 @@ def test_many_prefixes_shared_system_prompt(rng):
         idx.pump()
     s = idx.stats()
     assert s["hits"] == 20 and s["in_sync"]
+
+
+def test_chain_keys_warning_free(rng):
+    """FNV-1a uses masked Python-int arithmetic: intended mod-2^64
+    wraparound, no numpy overflow RuntimeWarning."""
+    import warnings
+    idx = PrefixCacheIndex(block_size=4)
+    toks = rng.integers(0, 2**31, 64).tolist()
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        keys = idx.chain_keys(toks)
+    assert keys.size == 16
+    assert (keys != 0).all() and (keys != 0xFFFFFFFF).all()
+
+
+class TestPrefixShortcut:
+    """The prefix -> block-table shortcut: third client of the shared
+    maintenance runtime (one probe for a full-prefix hit)."""
+
+    def test_full_hit_routes_through_shortcut(self, rng):
+        idx = PrefixCacheIndex(block_size=4, chain_threshold=1.0)
+        toks = rng.integers(0, 50000, 32).tolist()
+        idx.insert_prefix(toks, list(range(100, 108)))
+        assert not idx.prefix_mapper.in_sync(["__global__"])
+        idx.pump()
+        n, blocks = idx.match_prefix(toks)
+        assert n == 32 and blocks == list(range(100, 108))
+        s = idx.stats()
+        assert s["prefix_in_sync"]
+        assert s["prefix_routed_shortcut"] == 1
+
+    def test_partial_match_falls_back_to_walk(self, rng):
+        idx = PrefixCacheIndex(block_size=4, chain_threshold=1.0)
+        shared = rng.integers(0, 50000, 16).tolist()
+        idx.insert_prefix(shared + rng.integers(0, 50000, 16).tolist(),
+                          list(range(8)))
+        idx.pump()
+        other = shared + rng.integers(50001, 60000, 16).tolist()
+        n, blocks = idx.match_prefix(other)
+        assert n == 16 and blocks == [0, 1, 2, 3]
+        assert idx.stats()["prefix_routed_walk"] == 1
+
+    def test_stale_view_routes_authoritative(self, rng):
+        idx = PrefixCacheIndex(block_size=4, chain_threshold=1.0)
+        toks = rng.integers(0, 50000, 16).tolist()
+        idx.insert_prefix(toks, [0, 1, 2, 3])
+        idx.index.pump()                    # per-block index in sync...
+        # ...but the prefix view is NOT pumped: version gate must refuse
+        n, blocks = idx.match_prefix(toks)
+        assert n == 16 and blocks == [0, 1, 2, 3]
+        assert idx.stats()["prefix_routed_shortcut"] == 0
+
+    def test_growth_recreates_view(self, rng):
+        idx = PrefixCacheIndex(block_size=4, table_log2=3,
+                               chain_threshold=1.0)
+        for i in range(12):                 # > 2^3 / 2 chains: forces growth
+            toks = rng.integers(0, 50000, 8).tolist()
+            idx.insert_prefix(toks, [2 * i, 2 * i + 1])
+            idx.pump()
+            n, blocks = idx.match_prefix(toks)
+            assert n == 8 and blocks == [2 * i, 2 * i + 1]
+        assert idx.prefix_mapper.stats.creates >= 2
+        assert idx._view[3] > 3          # table grew past its initial log2
+
+    def test_bulk_insert_grows_table_enough(self, rng):
+        """One bulk insert may need more than a single doubling; no chain
+        may be silently dropped from the rebuilt view."""
+        idx = PrefixCacheIndex(block_size=4, table_log2=2,
+                               chain_threshold=1.0)
+        toks = rng.integers(0, 50000, 80).tolist()   # 20 chains at once
+        idx.insert_prefix(toks, list(range(20)))
+        idx.pump()
+        assert (1 << idx._view[3]) >= 40             # 2x occupancy bound
+        n, blocks = idx.match_prefix(toks)
+        assert n == 80 and blocks == list(range(20))
+        assert idx.stats()["prefix_routed_shortcut"] == 1
