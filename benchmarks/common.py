@@ -46,6 +46,7 @@ class Row:
     value: float
     unit: str
     extra: str = ""
+    wall: float = 0.0   # wall seconds of the whole bench run (set by run.py)
 
     def csv(self) -> str:
         return f"{self.bench},{self.name},{self.value:.6g},{self.unit}," \

@@ -1,21 +1,28 @@
 """Benchmark harness entry point: one function per paper table/figure.
 
-``python -m benchmarks.run [--scale S] [--only table1,fig2,...]``
+``python -m benchmarks.run [--scale S] [--only table1,fig2,...]
+                           [--json PATH]``
 
-Prints ``bench,name,value,unit,extra`` CSV rows.  The roofline table
-(§Roofline, from the multi-pod dry-run) is appended when dry-run records
-exist under results/dryrun_baseline.
+Prints ``bench,name,value,unit,extra`` CSV rows; ``--json PATH``
+additionally writes the full Row list as structured JSON
+(``bench, name, value, unit, extra, wall``) — the machine-readable perf
+trajectory CI archives per commit.  The roofline table (§Roofline, from
+the multi-pod dry-run) is appended when dry-run records exist under
+results/dryrun_baseline.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import json
 import sys
 import time
 import traceback
 
 from benchmarks.common import Row, emit
 
-ALL = ("table1", "fig2", "fig4", "fig5", "fig7", "fig8", "kv_shortcut")
+ALL = ("table1", "fig2", "fig4", "fig5", "fig7", "fig8", "kv_shortcut",
+       "sharded")
 
 
 def main(argv=None) -> int:
@@ -24,6 +31,8 @@ def main(argv=None) -> int:
                     help="fraction of paper-size workloads (1.0 = paper)")
     ap.add_argument("--only", default="",
                     help="comma-separated subset of: " + ",".join(ALL))
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write all rows as structured JSON to PATH")
     ap.add_argument("--skip-roofline", action="store_true")
     args = ap.parse_args(argv)
     wanted = [b for b in args.only.split(",") if b] or list(ALL)
@@ -34,14 +43,25 @@ def main(argv=None) -> int:
         mod = __import__(f"benchmarks.bench_{name}", fromlist=["run"])
         t0 = time.time()
         try:
-            rows += mod.run(scale=args.scale)
-            rows.append(Row(name, "_bench_wall", time.time() - t0, "s"))
+            bench_rows = mod.run(scale=args.scale)
+            wall = time.time() - t0
+            for r in bench_rows:
+                r.wall = wall
+            rows += bench_rows
+            rows.append(Row(name, "_bench_wall", wall, "s", wall=wall))
         except Exception as e:
             failures += 1
             rows.append(Row(name, "_bench_error", 0.0, "-",
-                            f"{type(e).__name__}: {e}"))
+                            f"{type(e).__name__}: {e}",
+                            wall=time.time() - t0))
             traceback.print_exc(file=sys.stderr)
     emit(rows)
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump([dataclasses.asdict(r) for r in rows], f, indent=2)
+            f.write("\n")
+        print(f"wrote {len(rows)} rows to {args.json}", file=sys.stderr)
 
     if not args.skip_roofline:
         import os

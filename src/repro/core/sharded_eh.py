@@ -1,0 +1,311 @@
+"""Sharded Shortcut-EH: the paper's index partitioned for scale.
+
+The shortcut directory of §4.1 is a single-node construct; this module
+partitions the key space by the **top ``log2(N)`` bits of the directory
+hash** into N shards, each a *full* :class:`~repro.core.shortcut_eh.ShortcutEH`
+(own bucket pool, own traditional directory, own composed view, own
+mapper) registered in a :class:`~repro.runtime.shard_group.MapperGroup`.
+Because the directory uses MSB indexing, the shard-local directories are
+exactly the N contiguous slices of the one big directory the flat index
+would have built — the partition is a *refinement*, not a different
+structure, which is why a sharded index answers every lookup bit-for-bit
+identically to a flat one over the same trace.
+
+What sharding buys (ISSUE/DESIGN.md §4):
+
+  * **bounded per-shard view size** — each shard's directory/view stays
+    in the Pallas kernels' VMEM-resident regime (DESIGN.md §2.4) long
+    after a flat directory would have outgrown it;
+  * **shard-local maintenance** — splits, doublings, create/update
+    requests, version gates and route decisions touch exactly one
+    shard's mapper; a doubling in shard 3 never collapses shard 5's
+    pending updates nor gates its reads (the §5 shootdown concern,
+    confined);
+  * **one-dispatch batched lookup** — a key batch is bucketized per
+    shard with a single stable ``argsort`` pass, padded to a static
+    per-shard capacity (bounded size set => bounded jit variants), and
+    resolved by ONE ``pallas_call`` whose grid iterates shards
+    (``kernels/eh_lookup.sharded_eh_lookup``), then scattered back to
+    input order.
+
+``num_shards=1`` degenerates to the flat index: same hash, same routing
+law, same maintenance protocol, and ``lookup`` delegates straight to the
+inner :class:`ShortcutEH`.
+
+Skew note: within shard s every key shares its top ``shard_bits`` hash
+bits, so the first ``shard_bits`` doublings of a shard's directory are
+degenerate (both halves of each split land on one side until local
+depths exceed ``shard_bits``).  Correctness and the I1–I5 invariants are
+untouched; budget ``max_global_depth`` per shard accordingly (the flat
+equivalent depth, not depth - shard_bits).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import extendible_hashing as eh
+from repro.core.hashing import HASH_C1
+from repro.core.shortcut_eh import ShortcutEH
+from repro.runtime.mapper import GLOBAL_VIEW, MaintenanceStats
+from repro.runtime.shard_group import MapperGroup
+
+__all__ = ["ShardedShortcutEH", "partition_by_shard", "shard_of_keys",
+           "shard_order"]
+
+# Static per-shard key-batch capacities (bounded set => bounded number of
+# jit/pallas variants), mirroring shortcut_eh._CHUNK_SIZES.
+_BATCH_SIZES = (64, 256, 1024, 4096, 16384, 65536, 262144)
+
+
+def _pad_batch(n: int) -> int:
+    for c in _BATCH_SIZES:
+        if n <= c:
+            return c
+    return -(-n // _BATCH_SIZES[-1]) * _BATCH_SIZES[-1]
+
+
+def shard_of_keys(keys: np.ndarray, shard_bits: int) -> np.ndarray:
+    """Shard index per key: the top ``shard_bits`` of the directory hash
+    (host twin of ``hashing.hash_dir`` + MSB slot rule)."""
+    if shard_bits == 0:
+        return np.zeros(np.asarray(keys).shape, np.int64)
+    h = (np.asarray(keys, np.uint64) * np.uint64(HASH_C1)) \
+        & np.uint64(0xFFFFFFFF)
+    return (h >> np.uint64(32 - shard_bits)).astype(np.int64)
+
+
+def shard_order(sid: np.ndarray, num_shards: int):
+    """The one stable argsort pass every batched operation shares:
+    returns ``(order, counts, starts)`` — shard-sort permutation,
+    per-shard key counts, and each shard's offset in the sorted order."""
+    order = np.argsort(sid, kind="stable")
+    counts = np.bincount(sid, minlength=num_shards)
+    starts = np.zeros(num_shards, np.int64)
+    np.cumsum(counts[:-1], out=starts[1:])
+    return order, counts, starts
+
+
+def partition_by_shard(keys: np.ndarray, sid: np.ndarray, num_shards: int,
+                       cap: int, fill: int = 0, *, order=None, counts=None,
+                       starts=None):
+    """Bucketize ``keys`` per shard (via :func:`shard_order`, reused when
+    the caller already ran it to size ``cap``).
+
+    Returns ``(padded, counts, order, rank)``: ``padded`` is
+    (num_shards, cap) with shard s's keys in ``padded[s, :counts[s]]``
+    and ``fill`` elsewhere; ``order``/``rank`` invert the permutation —
+    input element ``order[i]`` sits at ``padded[sid[order][i],
+    rank[i]]``, so per-shard results scatter back to input order with
+    ``out[order] = results[sid[order], rank]``.
+    """
+    keys = np.asarray(keys)
+    if order is None or counts is None or starts is None:
+        order, counts, starts = shard_order(sid, num_shards)
+    sid_sorted = sid[order]
+    rank = np.arange(keys.size, dtype=np.int64) - starts[sid_sorted]
+    padded = np.full((num_shards, cap), fill, keys.dtype)
+    padded[sid_sorted, rank] = keys[order]
+    return padded, counts, order, rank
+
+
+class ShardedShortcutEH:
+    """N-way partitioned Shortcut-EH behind the flat index's API.
+
+    Each shard's ``capacity``/``max_global_depth``/``bucket_slots`` equal
+    the constructor arguments (capacity is per shard — sizing it as the
+    flat index's keeps the sharded index at least as drop-free as the
+    flat one under any skew, the precondition for bit-for-bit parity).
+    """
+
+    def __init__(self, max_global_depth: int, bucket_slots: int,
+                 capacity: int, *, num_shards: int = 1,
+                 fan_in_threshold: float = 8.0,
+                 poll_interval: float = 0.025, async_mapper: bool = False,
+                 routing_factory=None):
+        if num_shards < 1 or num_shards & (num_shards - 1):
+            raise ValueError(f"num_shards must be a power of two, "
+                             f"got {num_shards}")
+        self.num_shards = num_shards
+        self.shard_bits = num_shards.bit_length() - 1
+        self.shards = [
+            ShortcutEH(max_global_depth, bucket_slots, capacity,
+                       fan_in_threshold=fan_in_threshold,
+                       poll_interval=poll_interval,
+                       async_mapper=async_mapper,
+                       routing=(routing_factory(i) if routing_factory
+                                else None))
+            for i in range(num_shards)]
+        self.group = MapperGroup(
+            [s.mapper for s in self.shards],
+            router=lambda key: int(shard_of_keys(
+                np.asarray([key], np.uint32), self.shard_bits)[0]))
+
+    # -- routing -------------------------------------------------------------
+
+    def shard_of(self, keys) -> np.ndarray:
+        """Vectorized key -> shard index (top hash bits)."""
+        return shard_of_keys(np.asarray(keys, np.uint32), self.shard_bits)
+
+    # -- main-thread API ----------------------------------------------------
+
+    def insert(self, keys, values) -> None:
+        """Partition the batch and insert into each owning shard.
+
+        Strictly shard-local: each sub-insert takes only its shard's
+        lock, bumps only its shard's version, and enqueues maintenance
+        only on its shard's queue."""
+        keys = np.asarray(keys, np.uint32)
+        values = np.asarray(values, np.uint32)
+        if self.num_shards == 1:
+            self.shards[0].insert(keys, values)
+            return
+        sid = self.shard_of(keys)
+        order, counts, starts = shard_order(sid, self.num_shards)
+        for s in range(self.num_shards):
+            c = int(counts[s])
+            if c:
+                idx = order[starts[s]:starts[s] + c]
+                self.shards[s].insert(keys[idx], values[idx])
+
+    def lookup(self, keys) -> jax.Array:
+        """Routed lookup in input order (each shard independently takes
+        its shortcut or traditional path per its own gate).
+
+        Cross-shard batching: one argsort pass, static padded per-shard
+        sub-batches (pad lanes are dropped on scatter-back)."""
+        keys = np.asarray(keys, np.uint32)
+        if self.num_shards == 1:
+            return self.shards[0].lookup(keys)
+        sid = self.shard_of(keys)
+        order, counts, starts = shard_order(sid, self.num_shards)
+        cap = _pad_batch(int(counts.max()) if keys.size else 1)
+        padded, counts, order, rank = partition_by_shard(
+            keys, sid, self.num_shards, cap,
+            order=order, counts=counts, starts=starts)
+        results = np.empty((self.num_shards, cap), np.uint32)
+        for s in range(self.num_shards):
+            if counts[s]:
+                results[s] = np.asarray(self.shards[s].lookup(padded[s]))
+        out = np.empty(keys.size, np.uint32)
+        out[order] = results[sid[order], rank]
+        return jnp.asarray(out)
+
+    def lookup_batched(self, keys, *, tile: int = 256) -> jax.Array:
+        """Fused cross-shard lookup: ONE Pallas dispatch for all shards.
+
+        Routes the whole batch through the shortcut kernel when every
+        shard's gate allows it *and* the composed views share a shape
+        (uniform load); otherwise the traditional fused kernel resolves
+        every shard (stacked directories — always shape-uniform).
+        Returns values in input order."""
+        from repro.kernels.eh_lookup import (sharded_eh_lookup,
+                                             sharded_shortcut_lookup)
+        keys = np.asarray(keys, np.uint32)
+        sid = self.shard_of(keys)
+        order, counts, starts = shard_order(sid, self.num_shards)
+        cap = _pad_batch(int(counts.max()) if keys.size else 1)
+        padded, counts, order, rank = partition_by_shard(
+            keys, sid, self.num_shards, cap,
+            order=order, counts=counts, starts=starts)
+        # ONE snapshot per shard (view tuples swap atomically; EHStates
+        # are reassigned whole) so a concurrent async replay can neither
+        # tear a view nor make the uniformity check and the stack
+        # disagree about shapes.
+        views = [s.view_snapshot() for s in self.shards]
+        states = [s.state for s in self.shards]
+        use_shortcut = (
+            all(v is not None for v in views)
+            and len({v[2] for v in views}) == 1
+            and all(s.mapper.gate(s.avg_fan_in(), [GLOBAL_VIEW])
+                    for s in self.shards))
+        self.group.count_route(use_shortcut)
+        keys_dev = jnp.asarray(padded)
+        if use_shortcut:
+            res = sharded_shortcut_lookup(
+                keys_dev,
+                jnp.stack([v[0] for v in views]),
+                jnp.stack([v[1] for v in views]),
+                jnp.asarray([v[2] for v in views], jnp.int32), tile=tile)
+        else:
+            res = sharded_eh_lookup(
+                keys_dev,
+                jnp.stack([st.directory for st in states]),
+                jnp.stack([st.bucket_keys for st in states]),
+                jnp.stack([st.bucket_vals for st in states]),
+                jnp.asarray([int(st.global_depth) for st in states],
+                            jnp.int32), tile=tile)
+        res = np.asarray(res)
+        out = np.empty(keys.size, np.uint32)
+        out[order] = res[sid[order], rank]
+        return jnp.asarray(out)
+
+    # -- aggregated bookkeeping ----------------------------------------------
+
+    @property
+    def stats(self) -> MaintenanceStats:
+        return self.group.stats
+
+    def per_shard_stats(self) -> list:
+        return self.group.per_shard_stats()
+
+    @property
+    def routed_shortcut(self) -> int:
+        return self.group.routed_shortcut
+
+    @property
+    def routed_traditional(self) -> int:
+        return self.group.routed_fallback
+
+    def num_entries(self) -> int:
+        return sum(int(eh.eh_num_entries(s.state)) for s in self.shards)
+
+    def avg_fan_in(self) -> float:
+        return float(np.mean([s.avg_fan_in() for s in self.shards]))
+
+    def in_sync(self) -> bool:
+        return all(s.in_sync() for s in self.shards)
+
+    def pump(self, max_requests: int = 1 << 30) -> int:
+        return self.group.pump(max_requests)
+
+    def wait_in_sync(self, timeout: float = 30.0) -> bool:
+        return self.group.wait_in_sync(timeout=timeout)
+
+    def close(self) -> None:
+        self.group.close()
+
+    # -- verification --------------------------------------------------------
+
+    def check_invariants(self) -> dict:
+        """Per-shard structural invariants I1–I5 plus the cross-shard
+        S1: every live key is stored in the shard its hash routes to."""
+        out = {"ok": True, "errors": [], "shards": []}
+        for s, shard in enumerate(self.shards):
+            rep = eh.check_invariants(shard.state)
+            out["shards"].append(rep)
+            if not rep["ok"]:
+                out["ok"] = False
+                out["errors"] += [f"shard {s}: {e}" for e in rep["errors"]]
+            st = shard.state
+            nb = int(st.num_buckets)
+            bk = np.asarray(st.bucket_keys[:nb])
+            live = bk[bk != np.uint32(0xFFFFFFFF)]
+            if live.size:
+                owners = shard_of_keys(live, self.shard_bits)
+                if not (owners == s).all():
+                    out["ok"] = False
+                    out["errors"].append(
+                        f"S1: shard {s} holds foreign keys "
+                        f"{live[owners != s][:4].tolist()}")
+        return out
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False

@@ -74,9 +74,11 @@ class ShortcutEH:
                  poll_interval: float = 0.025, async_mapper: bool = False,
                  routing=None):
         self.state = eh.eh_create(max_global_depth, bucket_slots, capacity)
-        self.view_keys: Optional[jax.Array] = None
-        self.view_vals: Optional[jax.Array] = None
-        self.view_log2 = -1
+        # The composed view is ONE atomically-swapped tuple
+        # (view_keys, view_vals, view_log2): replays publish a fully
+        # built tuple and readers snapshot it once, so a reader racing
+        # an async replay can never pair new keys with old vals.
+        self._view: Optional[tuple] = None
         self.mapper = ShortcutMapper(
             replay_create=self._replay_create,
             replay_update=self._replay_update,
@@ -120,6 +122,27 @@ class ShortcutEH:
     def poll_interval(self) -> float:
         return self.mapper.poll_interval
 
+    # -- view snapshot (atomic read; see _view comment in __init__) ----------
+
+    def view_snapshot(self) -> Optional[tuple]:
+        """One consistent (view_keys, view_vals, view_log2) or None."""
+        return self._view
+
+    @property
+    def view_keys(self) -> Optional[jax.Array]:
+        v = self._view
+        return None if v is None else v[0]
+
+    @property
+    def view_vals(self) -> Optional[jax.Array]:
+        v = self._view
+        return None if v is None else v[1]
+
+    @property
+    def view_log2(self) -> int:
+        v = self._view
+        return -1 if v is None else v[2]
+
     # -- main-thread API ----------------------------------------------------
 
     def insert(self, keys, values) -> None:
@@ -144,16 +167,17 @@ class ShortcutEH:
     def lookup(self, keys) -> jax.Array:
         """Route through the shortcut when in sync and fan-in permits."""
         keys = jnp.asarray(keys, jnp.uint32)
-        use = self.use_shortcut()
+        view = self._view     # single read: the replay swap is atomic
+        use = (view is not None
+               and self.mapper.gate(self.avg_fan_in(), [GLOBAL_VIEW]))
         self.mapper.count_route(use)
         if use:
             return eh.shortcut_lookup_many(
-                self.view_keys, self.view_vals,
-                self.state.global_depth, keys)
+                view[0], view[1], self.state.global_depth, keys)
         return eh.eh_lookup_many(self.state, keys)
 
     def use_shortcut(self) -> bool:
-        return (self.view_keys is not None
+        return (self._view is not None
                 and self.mapper.gate(self.avg_fan_in(), [GLOBAL_VIEW]))
 
     def in_sync(self) -> bool:
@@ -180,15 +204,14 @@ class ShortcutEH:
     # -- replay callables (the only EH-specific maintenance code) ------------
 
     def _view_arrays(self):
-        if self.view_keys is None:
-            return ()
-        return (self.view_keys, self.view_vals)
+        view = self._view
+        return () if view is None else view[:2]
 
     def _replay_create(self, st: eh.EHState, requests) -> None:
         g = int(st.global_depth)
         view_slots = _next_pow2(1 << g)
-        self.view_keys, self.view_vals = eh.compose_shortcut(st, view_slots)
-        self.view_log2 = view_slots.bit_length() - 1
+        vk, vv = eh.compose_shortcut(st, view_slots)
+        self._view = (vk, vv, view_slots.bit_length() - 1)
         self.mapper.stats.slots_remapped += view_slots
 
     def _replay_update(self, st: eh.EHState, requests) -> None:
@@ -200,11 +223,13 @@ class ShortcutEH:
         own current bucket (a no-op), mirroring the paper's coalescing of
         neighbouring remaps into fewer calls.
         """
-        if self.view_keys is None:
+        view = self._view
+        if view is None:
             # the composed view already reflects the snapshot (and thus
             # these updates); remapping on top would be duplicate work
             self._replay_create(st, requests)
             return
+        vk, vv, vlog2 = view
         touched = np.unique(np.concatenate([r.payload for r in requests]))
         g = int(st.global_depth)
         dir_np = np.asarray(st.directory[: 1 << g])
@@ -216,10 +241,9 @@ class ShortcutEH:
         pad = n - slots.size
         slots_p = np.concatenate([slots, np.zeros(pad, np.int32)])
         offsets_p = dir_np[slots_p].astype(np.int32)
-        self.view_keys = rewiring.remap_slots(
-            self.view_keys, st.bucket_keys, slots_p, offsets_p)
-        self.view_vals = rewiring.remap_slots(
-            self.view_vals, st.bucket_vals, slots_p, offsets_p)
+        vk = rewiring.remap_slots(vk, st.bucket_keys, slots_p, offsets_p)
+        vv = rewiring.remap_slots(vv, st.bucket_vals, slots_p, offsets_p)
+        self._view = (vk, vv, vlog2)
         self.mapper.stats.slots_remapped += int(slots.size)
 
     def __enter__(self):

@@ -67,6 +67,17 @@ def default_rules(mesh: Mesh) -> ShardingRules:
         "kv_seqs": (dp, ("data",)),      # sequences in the KV pool
         "blocks": (dp, ("data",)),       # physical KV blocks
         "head_dim": (("model",),),       # last-resort pool sharding
+        # EH index dims (core/sharded_eh): a sharded index stacks its
+        # per-shard structures on a leading `eh_shard` dim — one shard
+        # per data slice keeps each shard's lookup local; the directory
+        # and bucket-pool dims split over the model axis when a single
+        # shard outgrows one device (the VMEM-regime escape hatch).
+        # Bucket rows (`eh_slots`) stay contiguous: the probe is a
+        # vectorized scan of one row and must never cross devices.
+        "eh_shard": (dp, ("data",)),
+        "eh_dir": (("model",), ("data",)),
+        "eh_buckets": (("model",), ("data",)),
+        "eh_slots": (),
         # generic replicated
         "layer": (),
     })
@@ -215,6 +226,31 @@ def batch_spec(batch, mesh: Mesh, rules: Optional[ShardingRules] = None):
 
 def replicated(mesh: Mesh):
     return NamedSharding(mesh, P())
+
+
+#: Logical names of the stacked sharded-EH lookup operands
+#: (``core/sharded_eh.ShardedShortcutEH.lookup_batched``) — resolved by
+#: the same divisibility-aware rules as every other array in the system.
+EH_LOOKUP_NAMES = {
+    "keys": ("eh_shard", None),                      # (N, K)
+    "directories": ("eh_shard", "eh_dir"),           # (N, D)
+    "bucket_keys": ("eh_shard", "eh_buckets", "eh_slots"),   # (N, C, S)
+    "bucket_vals": ("eh_shard", "eh_buckets", "eh_slots"),
+    "view_keys": ("eh_shard", "eh_dir", "eh_slots"),         # (N, V, S)
+    "view_vals": ("eh_shard", "eh_dir", "eh_slots"),
+    "global_depths": (None,),                        # (N,) tiny: replicate
+}
+
+
+def sharded_eh_specs(operands: dict, mesh: Mesh,
+                     rules: Optional[ShardingRules] = None) -> dict:
+    """NamedShardings for a dict of sharded-EH lookup operands, keyed by
+    the :data:`EH_LOOKUP_NAMES` operand names.  Indivisible dims (e.g.
+    2 shards on a 16-way data axis) replicate instead of failing, per
+    the module's contract."""
+    return {k: NamedSharding(
+                mesh, logical_spec(v.shape, EH_LOOKUP_NAMES[k], mesh, rules))
+            for k, v in operands.items()}
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,30 @@
+"""Pallas execution-mode resolution shared by every kernel entry point.
+
+The kernels take ``interpret: bool | None``.  ``None`` (the default)
+means *auto-detect*: compile through Mosaic when the default JAX backend
+is a TPU, fall back to the Pallas interpreter everywhere else (CPU CI,
+dev containers).  Before this existed the default was a hard-coded
+``True``, so a TPU run that forgot to pass ``interpret=False`` silently
+executed the hot loop in the (orders-of-magnitude slower) interpreter —
+the worst kind of perf bug, because nothing fails.
+
+An explicit ``True``/``False`` always wins over auto-detection;
+``kernels/ops.py`` additionally honours the ``REPRO_PALLAS_INTERPRET``
+environment override for whole-process forcing.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+
+def resolve_interpret(interpret: Optional[bool] = None) -> bool:
+    """Concrete interpret flag for a ``pl.pallas_call``.
+
+    Called at trace time (``interpret`` is a static argument of every
+    kernel's jit wrapper), so the backend probe costs nothing per step.
+    """
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)

@@ -8,21 +8,36 @@ Two access paths, mirroring §2 of the paper:
     probe.  One indirection: the composed view (``rewiring.compose``) plays
     the role of the page table having pre-resolved the mapping.
 
+Both exist in a **sharded** form (:func:`sharded_eh_lookup`,
+:func:`sharded_shortcut_lookup`) for the partitioned index
+(``core/sharded_eh.py``): the per-shard structures are stacked on a
+leading shard axis and the shard loop is a *grid dimension* of one
+``pallas_call`` — N shards share a single kernel specialization instead
+of recompiling (or even re-dispatching) per shard.  The single-shard
+entry points are the N=1 degenerate case of the same kernel, so there is
+exactly one lookup-kernel body in the tree.
+
 TPU adaptation notes (DESIGN.md §2): the VPU has no scatter/gather to HBM,
 so both kernels keep the directory and bucket pages VMEM-resident (block =
-the full structure; for the assigned sizes — 2^14 slots x 64-slot buckets
-of u32 pairs — this is ~8 MiB, within VMEM).  Per key-tile the kernel
-computes the multiplicative hashes vectorized on the VPU, then resolves
-the data-dependent row reads with a ``fori_loop`` of dynamic slices
-(sublane-dynamic addressing, which Mosaic supports on VMEM).  The probe
-itself is vectorized across the bucket row.  Directories larger than VMEM
-are exactly the regime where the paper's lesson applies: don't chase
-pointers — compose the view first (``shortcut_lookup``) or fall back to
-the XLA gather path (``core.extendible_hashing``).
+one shard's full structure; for the assigned sizes — 2^14 slots x 64-slot
+buckets of u32 pairs — this is ~8 MiB, within VMEM; sharding is exactly
+what keeps *growing* structures inside this regime, DESIGN.md §2.4).  Per
+key-tile the kernel computes the multiplicative hashes vectorized on the
+VPU, then resolves the data-dependent row reads with a ``fori_loop`` of
+dynamic slices (sublane-dynamic addressing, which Mosaic supports on
+VMEM).  The probe itself is vectorized across the bucket row.
+Directories larger than VMEM are exactly the regime where the paper's
+lesson applies: don't chase pointers — compose the view first
+(``shortcut_lookup``), shard the structure, or fall back to the XLA
+gather path (``core.extendible_hashing``).
+
+``interpret=None`` auto-detects the execution mode (compiled on TPU,
+interpreted elsewhere — ``kernels/backend.py``).
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -30,6 +45,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import hashing
+from repro.kernels.backend import resolve_interpret
 
 # hashing.HASH_C1/C2 and the sentinels are python ints (NOT jnp scalars: a
 # traced module-level constant would be captured by the kernel, which
@@ -51,72 +67,117 @@ def _probe_row(row_k, row_v, key, slots: int):
 
 def _lookup_kernel(gd_ref, keys_ref, dir_ref, bk_ref, bv_ref, out_ref, *,
                    tile: int, slots: int, two_level: bool):
-    g = gd_ref[0]
-    keys = keys_ref[...]
+    """One (shard, key-tile) grid cell.
+
+    Blocks carry a leading unit shard dim; the shard's global depth comes
+    from the scalar-prefetch vector, indexed by the shard grid position —
+    the only per-shard scalar, which is what lets every shard share this
+    one specialization."""
+    g = gd_ref[pl.program_id(0)]
+    keys = keys_ref[0]
     slot = hashing.dir_slot(hashing.hash_dir(keys), g)
 
     def body(i, _):
         key = keys[i]
         s = slot[i]
         if two_level:
-            row = dir_ref[s]            # indirection 1: directory
+            row = dir_ref[0, s]         # indirection 1: directory
         else:
             row = s                     # shortcut: slot IS the row
-        row_k = bk_ref[row]             # indirection 2 (or 1): bucket page
-        row_v = bv_ref[row]
-        out_ref[i] = _probe_row(row_k, row_v, key, slots)
+        row_k = bk_ref[0, row]          # indirection 2 (or 1): bucket page
+        row_v = bv_ref[0, row]
+        out_ref[0, i] = _probe_row(row_k, row_v, key, slots)
         return 0
 
     jax.lax.fori_loop(0, tile, body, 0)
 
 
-def _run(keys, directory, bucket_keys, bucket_vals, global_depth, *,
-         two_level: bool, tile: int, interpret: bool):
-    n = keys.shape[0]
+def _run(keys, directory, bucket_keys, bucket_vals, global_depths, *,
+         two_level: bool, tile: int, interpret: Optional[bool]):
+    """Shared driver: keys (N, K); directory (N, D); buckets (N, C, S);
+    global_depths (N,).  Grid = (shards, key tiles); every shard reuses
+    the same compiled kernel — one ``pallas_call``, not N."""
+    N, n = keys.shape
     pad = (-n) % tile
     if pad:
-        keys = jnp.pad(keys, (0, pad))
+        keys = jnp.pad(keys, ((0, 0), (0, pad)))
     nt = (n + pad) // tile
-    D = directory.shape[0]
-    C, S = bucket_keys.shape
+    D = directory.shape[1]
+    C, S = bucket_keys.shape[1:]
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,          # global depth in SMEM
-        grid=(nt,),
+        num_scalar_prefetch=1,          # per-shard global depths in SMEM
+        grid=(N, nt),
         in_specs=[
-            pl.BlockSpec((tile,), lambda i, gd: (i,)),
-            pl.BlockSpec((D,), lambda i, gd: (0,)),       # VMEM-resident
-            pl.BlockSpec((C, S), lambda i, gd: (0, 0)),
-            pl.BlockSpec((C, S), lambda i, gd: (0, 0)),
+            pl.BlockSpec((1, tile), lambda s, i, gd: (s, i)),
+            pl.BlockSpec((1, D), lambda s, i, gd: (s, 0)),    # VMEM-resident
+            pl.BlockSpec((1, C, S), lambda s, i, gd: (s, 0, 0)),
+            pl.BlockSpec((1, C, S), lambda s, i, gd: (s, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((tile,), lambda i, gd: (i,)),
+        out_specs=pl.BlockSpec((1, tile), lambda s, i, gd: (s, i)),
     )
     kernel = functools.partial(_lookup_kernel, tile=tile, slots=S,
                                two_level=two_level)
     out = pl.pallas_call(
         kernel, grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((n + pad,), jnp.uint32),
-        interpret=interpret,
-    )(jnp.asarray([global_depth], jnp.int32), keys.astype(jnp.uint32),
+        out_shape=jax.ShapeDtypeStruct((N, n + pad), jnp.uint32),
+        interpret=resolve_interpret(interpret),
+    )(global_depths.astype(jnp.int32), keys.astype(jnp.uint32),
       directory.astype(jnp.int32), bucket_keys, bucket_vals)
-    return out[:n]
+    return out[:, :n]
 
+
+# ---------------------------------------------------------------------------
+# Single-shard entry points (N=1 degenerate case of the sharded kernel).
+# ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnames=("tile", "interpret"))
 def eh_lookup(keys, directory, bucket_keys, bucket_vals, global_depth, *,
-              tile: int = 256, interpret: bool = True):
+              tile: int = 256, interpret: Optional[bool] = None):
     """Traditional EH lookup: keys (N,) -> values (N,) (MISS on absent).
 
     directory: (D,) int32; bucket_keys/vals: (C, S) uint32."""
-    return _run(keys, directory, bucket_keys, bucket_vals, global_depth,
-                two_level=True, tile=tile, interpret=interpret)
+    return _run(keys[None], directory[None], bucket_keys[None],
+                bucket_vals[None],
+                jnp.reshape(jnp.asarray(global_depth, jnp.int32), (1,)),
+                two_level=True, tile=tile, interpret=interpret)[0]
 
 
 @functools.partial(jax.jit, static_argnames=("tile", "interpret"))
 def shortcut_lookup(keys, view_keys, view_vals, global_depth, *,
-                    tile: int = 256, interpret: bool = True):
+                    tile: int = 256, interpret: Optional[bool] = None):
     """Shortcut lookup over the composed view: one indirection fewer.
 
     view_keys/vals: (2^g_cap, S) — slot-indexed bucket pages."""
-    dummy_dir = jnp.zeros((1,), jnp.int32)  # unused in shortcut mode
-    return _run(keys, dummy_dir, view_keys, view_vals, global_depth,
+    dummy_dir = jnp.zeros((1, 1), jnp.int32)  # unused in shortcut mode
+    return _run(keys[None], dummy_dir, view_keys[None], view_vals[None],
+                jnp.reshape(jnp.asarray(global_depth, jnp.int32), (1,)),
+                two_level=False, tile=tile, interpret=interpret)[0]
+
+
+# ---------------------------------------------------------------------------
+# Batched cross-shard entry points (``core/sharded_eh.py``): one dispatch,
+# one specialization, shard = grid dimension.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def sharded_eh_lookup(keys, directories, bucket_keys, bucket_vals,
+                      global_depths, *, tile: int = 256,
+                      interpret: Optional[bool] = None):
+    """Traditional lookup across N stacked shards.
+
+    keys: (N, K) — shard-bucketized, padded to a static per-shard
+    capacity (pad lanes return MISS and are dropped by the caller's
+    scatter-back); directories: (N, D); bucket_keys/vals: (N, C, S);
+    global_depths: (N,).  Returns (N, K) uint32."""
+    return _run(keys, directories, bucket_keys, bucket_vals, global_depths,
+                two_level=True, tile=tile, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def sharded_shortcut_lookup(keys, view_keys, view_vals, global_depths, *,
+                            tile: int = 256,
+                            interpret: Optional[bool] = None):
+    """Shortcut lookup across N stacked shards (views (N, V, S))."""
+    dummy_dir = jnp.zeros((keys.shape[0], 1), jnp.int32)
+    return _run(keys, dummy_dir, view_keys, view_vals, global_depths,
                 two_level=False, tile=tile, interpret=interpret)

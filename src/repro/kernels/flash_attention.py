@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.backend import resolve_interpret
+
 _NEG_INF = -1e30
 
 
@@ -94,7 +96,7 @@ def flash_attention(q, k, v, *, causal: bool = True,
                     window: Optional[int] = None,
                     softcap: Optional[float] = None,
                     bq: int = 256, bkv: int = 512,
-                    interpret: bool = True) -> jax.Array:
+                    interpret: Optional[bool] = None) -> jax.Array:
     """q: (B, KV, G, Sq, hd); k/v: (B, KV, Skv, hd) -> like q.
 
     Sq/Skv are padded to tile multiples internally; q positions are
@@ -137,6 +139,6 @@ def flash_attention(q, k, v, *, causal: bool = True,
             pltpu.VMEM((G, bq), jnp.float32),
             pltpu.VMEM((G, bq, hd), jnp.float32),
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(q, k, v)
     return out[:, :, :, :Sq]

@@ -1,9 +1,10 @@
 """Public jit'd entry points for the Pallas kernels.
 
 Each op accepts *model-layout* arrays, adapts them to the kernel layouts,
-and dispatches to the kernel (``interpret=True`` on CPU — the container
-has no TPU; on TPU set ``REPRO_PALLAS_INTERPRET=0``).  ``ref.py`` holds
-the pure-jnp oracles the tests sweep against.
+and dispatches to the kernel.  Execution mode is auto-detected (compiled
+on TPU, interpreted elsewhere — ``kernels/backend.py``); set
+``REPRO_PALLAS_INTERPRET=1``/``0`` to force it process-wide.  ``ref.py``
+holds the pure-jnp oracles the tests sweep against.
 """
 from __future__ import annotations
 
@@ -20,7 +21,10 @@ from repro.kernels.paged_attention import paged_attention
 from repro.kernels.ragged_copy import ragged_copy
 from repro.kernels.shortcut_attention import shortcut_attention
 
-INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") == "1"
+_ENV = os.environ.get("REPRO_PALLAS_INTERPRET")
+#: None = auto-detect per backend (kernels/backend.resolve_interpret);
+#: "1"/"0" in the environment force interpret/compiled respectively.
+INTERPRET = None if _ENV is None else _ENV == "1"
 
 
 def mha_forward(q, k, v, *, causal: bool = True,

@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.backend import resolve_interpret
+
 _NEG_INF = -1e30
 
 
@@ -74,7 +76,7 @@ def _kernel(tables_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
     jax.jit, static_argnames=("softcap", "interpret"))
 def paged_attention(q, k_pool, v_pool, block_tables, seq_lens, *,
                     softcap: Optional[float] = None,
-                    interpret: bool = True) -> jax.Array:
+                    interpret: Optional[bool] = None) -> jax.Array:
     """q: (B, KV, G, hd); pools: (nblocks, KV, bs, hd);
     block_tables: (B, MB) int32 (-1 unset); seq_lens: (B,) int32.
     Returns (B, KV, G, hd)."""
@@ -110,6 +112,6 @@ def paged_attention(q, k_pool, v_pool, block_tables, seq_lens, *,
     return pl.pallas_call(
         kernel, grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(block_tables.astype(jnp.int32), seq_lens.astype(jnp.int32),
       q, k_pool, v_pool)

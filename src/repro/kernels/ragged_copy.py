@@ -16,11 +16,14 @@ replay; ``core.rewiring.remap_slots`` is its XLA fallback.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.backend import resolve_interpret
 
 
 def _copy_kernel(slots_ref, offsets_ref, pool_ref, view_ref, out_ref):
@@ -30,7 +33,7 @@ def _copy_kernel(slots_ref, offsets_ref, pool_ref, view_ref, out_ref):
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def ragged_copy(view, pool, slots, offsets, *,
-                interpret: bool = True) -> jax.Array:
+                interpret: Optional[bool] = None) -> jax.Array:
     """view: (V, row); pool: (P, row); slots/offsets: (M,) int32.
     Returns the updated view (aliased in-place on TPU)."""
     M = slots.shape[0]
@@ -51,5 +54,5 @@ def ragged_copy(view, pool, slots, offsets, *,
         _copy_kernel, grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct(view.shape, view.dtype),
         input_output_aliases={3: 0},  # args: slots, offsets, pool, view
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(slots.astype(jnp.int32), offsets.astype(jnp.int32), pool, view)

@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.backend import resolve_interpret
+
 _NEG_INF = -1e30
 
 
@@ -79,7 +81,7 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 def shortcut_attention(q, k_view, v_view, ctx_len, *,
                        window: Optional[int] = None,
                        softcap: Optional[float] = None,
-                       bs: int = 512, interpret: bool = True) -> jax.Array:
+                       bs: int = 512, interpret: Optional[bool] = None) -> jax.Array:
     """q: (B, KV, G, hd); k_view/v_view: (B, KV, S_cap, hd);
     ctx_len: (B,) int32 live tokens.  Returns (B, KV, G, hd)."""
     B, KV, G, hd = q.shape
@@ -112,5 +114,5 @@ def shortcut_attention(q, k_view, v_view, ctx_len, *,
     return pl.pallas_call(
         kernel, grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(ctx_len.astype(jnp.int32), q, k_view, v_view)

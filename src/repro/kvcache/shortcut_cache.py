@@ -15,9 +15,22 @@ sequence) requests, is eagerly populated before publication, version-gates
 every read (one version per sequence — a sequence is our directory unit),
 and a fragmentation statistic (the fan-in analogue) decides routing
 (:class:`~repro.runtime.mapper.FragmentationRouting`).
+
+**Sharded mode** (``num_shards > 1``): sequences partition across a
+:class:`~repro.runtime.shard_group.MapperGroup` by ``seq_id % N`` — each
+shard owns its sequences' versions, FIFO queue, collapse scope, routing
+policy and (async) thread, so a prefill burst re-linearizing one shard's
+sequences never collapses or gates another shard's decode appends
+(DESIGN.md §4, sharded mappers).  The view arrays stay whole-batch
+(decode reads them as one tensor); concurrent shard threads mutate
+disjoint sequence rows but share the array *objects*, so replay
+read-modify-writes serialize on one internal view lock — queueing,
+versioning and gating stay fully shard-independent.
 """
 from __future__ import annotations
 
+import contextlib
+import threading
 from typing import Optional
 
 import jax
@@ -26,6 +39,7 @@ import numpy as np
 
 from repro.kvcache import paged_cache as pc
 from repro.runtime.mapper import FragmentationRouting, ShortcutMapper
+from repro.runtime.shard_group import MapperGroup
 
 
 # -- functional core -----------------------------------------------------------
@@ -71,104 +85,160 @@ def slice_context(view_k: jax.Array, view_v: jax.Array, seq_ids: jax.Array):
 
 class ShortcutKVManager:
     """Maintains the shortcut view alongside an authoritative paged cache —
-    a thin client of the shortcut-maintenance runtime.
+    a thin client of the (sharded) shortcut-maintenance runtime.
 
     A read routes through the shortcut only when every sequence in the
     batch is in sync *and* the batch fragmentation exceeds
     ``frag_threshold`` (below it, the paged gather streams
     nearly-contiguous blocks anyway, and maintenance would be pure
     overhead — the TLB-thrashing lesson of §3.2 mapped to DMA terms).
+
+    ``num_shards`` partitions sequences across independent mappers
+    (``seq_id % num_shards`` router); the default 1 is exactly the
+    previous single-mapper behaviour.  A custom ``routing`` policy is
+    shared across shards — pass ``None`` for independent per-shard
+    :class:`FragmentationRouting` instances.
     """
 
     def __init__(self, cache: pc.PagedKVCache, seq_capacity: int, *,
                  frag_threshold: float = 0.25, poll_interval: float = 0.025,
-                 async_mapper: bool = False, routing=None):
+                 async_mapper: bool = False, routing=None,
+                 num_shards: int = 1):
+        if num_shards < 1:
+            raise ValueError(f"num_shards must be >= 1, got {num_shards}")
         L, _, bs, KV, hd = cache.k_pool.shape
         max_seqs = cache.block_tables.shape[0]
         self.cache = cache
         self.view_k = jnp.zeros((L, max_seqs, seq_capacity, KV, hd),
                                 cache.k_pool.dtype)
         self.view_v = jnp.zeros_like(self.view_k)
-        self.mapper = ShortcutMapper(
-            replay_create=self._replay_create,
-            replay_update=self._replay_update,
-            snapshot=lambda: self.cache,
-            view_arrays=lambda: (self.view_k, self.view_v),
-            routing=routing or FragmentationRouting(float(frag_threshold)),
-            poll_interval=poll_interval, async_mapper=async_mapper,
-            name="kv-mapper")
+        self._view_lock = threading.Lock()
+        self.group = MapperGroup(
+            [ShortcutMapper(
+                replay_create=lambda snap, reqs, shard=i:
+                    self._replay_create(snap, reqs, shard),
+                replay_update=lambda snap, reqs, shard=i:
+                    self._replay_update(snap, reqs, shard),
+                snapshot=lambda: self.cache,
+                view_arrays=lambda: (self.view_k, self.view_v),
+                routing=routing or FragmentationRouting(float(frag_threshold)),
+                poll_interval=poll_interval, async_mapper=async_mapper,
+                name=f"kv-mapper-{i}")
+             for i in range(num_shards)],
+            router=lambda seq_id: int(seq_id) % num_shards)
+        self.num_shards = num_shards
 
     # -- delegated bookkeeping (kept for API compatibility) ------------------
 
     @property
+    def mapper(self) -> ShortcutMapper:
+        """The first (with ``num_shards=1``: the only) mapper — the
+        pre-sharding single-mapper API surface."""
+        return self.group[0]
+
+    @property
     def routed_shortcut(self) -> int:
-        return self.mapper.routed_shortcut
+        return self.group.routed_shortcut
 
     @property
     def routed_paged(self) -> int:
-        return self.mapper.routed_fallback
+        return self.group.routed_fallback
 
     @property
     def frag_threshold(self):
-        return self.mapper.threshold
+        return self.group[0].threshold
 
     @frag_threshold.setter
     def frag_threshold(self, value: float) -> None:
-        self.mapper.threshold = value
+        for m in self.group:
+            m.threshold = value
 
     @property
     def stats(self):
-        return self.mapper.stats
+        return self.group.stats
+
+    # -- sharding helpers ----------------------------------------------------
+
+    def _by_shard(self, seq_ids: np.ndarray) -> dict:
+        """{shard: [seq ids]} preserving batch order within each shard."""
+        out: dict = {}
+        for s in np.asarray(seq_ids).tolist():
+            out.setdefault(self.group.route(int(s)), []).append(int(s))
+        return out
+
+    @contextlib.contextmanager
+    def _shard_locks(self, shards):
+        """Hold the involved shards' runtime locks (ascending order — the
+        lock hierarchy that makes multi-shard mutations deadlock-free)."""
+        with contextlib.ExitStack() as stack:
+            for r in sorted(shards):
+                stack.enter_context(self.group[r].lock)
+            yield
 
     # -- main-thread (serving) API -----------------------------------------
 
     def prefill(self, seq_ids: np.ndarray, k: jax.Array, v: jax.Array):
-        """Synchronous paged write + async create request per sequence."""
-        keys = [int(s) for s in np.asarray(seq_ids)]
-        with self.mapper.lock:
+        """Synchronous paged write + async create request per sequence,
+        enqueued on each sequence's owning shard."""
+        seq_ids = np.asarray(seq_ids)
+        by_shard = self._by_shard(seq_ids)
+        with self._shard_locks(by_shard):
             self.cache = pc.write_prefill(
                 self.cache, jnp.asarray(seq_ids), k, v)
-            versions = self.mapper.record(keys)
-        self.mapper.submit_create(keys, versions,
-                                  payload=np.asarray(seq_ids))
+            versions = {r: self.group[r].record(keys)
+                        for r, keys in by_shard.items()}
+        for r, keys in by_shard.items():
+            self.group[r].submit_create(keys, versions[r],
+                                        payload=np.asarray(keys))
 
     def append(self, seq_ids: np.ndarray, new_k: jax.Array,
                new_v: jax.Array):
-        """Synchronous paged append + async view-row update request."""
+        """Synchronous paged append + async view-row update request on
+        each sequence's owning shard (payload sliced per shard)."""
         seq_ids = np.asarray(seq_ids)
-        keys = [int(s) for s in seq_ids]
+        shard_of = np.asarray([self.group.route(int(s)) for s in seq_ids])
+        by_shard = {r: [int(s) for s in seq_ids[shard_of == r]]
+                    for r in sorted(set(shard_of.tolist()))}
         positions = np.asarray(self.cache.seq_lens)[seq_ids]
-        with self.mapper.lock:
+        with self._shard_locks(by_shard):
             self.cache = pc.append_tokens(
                 self.cache, jnp.asarray(seq_ids), new_k, new_v)
-            versions = self.mapper.record(keys)
-        self.mapper.submit_update(
-            keys, versions, payload=(seq_ids, positions, new_k, new_v))
+            versions = {r: self.group[r].record(keys)
+                        for r, keys in by_shard.items()}
+        for r, keys in by_shard.items():
+            idx = np.nonzero(shard_of == r)[0]
+            self.group[r].submit_update(
+                keys, versions[r],
+                payload=(seq_ids[idx], positions[idx],
+                         new_k[:, idx], new_v[:, idx]))
 
     def release(self, seq_ids: np.ndarray):
         """Synchronous release; the per-sequence views become permanently
         stale until the next prefill recreates them."""
-        with self.mapper.lock:
+        by_shard = self._by_shard(np.asarray(seq_ids))
+        with self._shard_locks(by_shard):
             self.cache = pc.release_seqs(self.cache, jnp.asarray(seq_ids))
-            self.mapper.invalidate([int(s) for s in np.asarray(seq_ids)])
+            for r, keys in by_shard.items():
+                self.group[r].invalidate(keys)
 
     def in_sync(self, seq_ids: np.ndarray) -> bool:
-        return self.mapper.in_sync(int(s) for s in np.asarray(seq_ids))
+        return self.group.in_sync(self._by_shard(seq_ids))
 
     def fragmentation(self, seq_ids: np.ndarray) -> float:
         return float(pc.fragmentation(self.cache, jnp.asarray(seq_ids)))
 
     def route(self, seq_ids: np.ndarray) -> str:
-        """'shortcut' | 'paged' — version gate + fragmentation cost model."""
-        if self.mapper.gate(self.fragmentation(seq_ids),
-                            (int(s) for s in np.asarray(seq_ids))):
+        """'shortcut' | 'paged' — version gate (across the involved
+        shards) + fragmentation cost model."""
+        if self.group.gate(self.fragmentation(seq_ids),
+                           self._by_shard(seq_ids)):
             return "shortcut"
         return "paged"
 
     def get_context(self, seq_ids: np.ndarray, route: Optional[str] = None):
         """Materialized (k_ctx, v_ctx) for decode + the route taken."""
         route = route or self.route(seq_ids)
-        self.mapper.count_route(route == "shortcut")
+        self.group.count_route(route == "shortcut")
         ids = jnp.asarray(seq_ids)
         if route == "shortcut":
             k, v = slice_context(self.view_k, self.view_v, ids)
@@ -182,31 +252,34 @@ class ShortcutKVManager:
     # -- maintenance (delegated to the runtime) ------------------------------
 
     def pump(self) -> int:
-        return self.mapper.pump()
+        return self.group.pump()
 
     def wait_in_sync(self, seq_ids: np.ndarray, timeout: float = 30.0):
-        return self.mapper.wait_in_sync(
-            [int(s) for s in np.asarray(seq_ids)], timeout)
+        return self.group.wait_in_sync(self._by_shard(seq_ids), timeout)
 
     def close(self):
-        self.mapper.close()
+        self.group.close()
 
     # -- replay callables (the only KV-specific maintenance code) ------------
 
-    def _replay_create(self, cache: pc.PagedKVCache, requests) -> None:
-        for r in requests:
-            for s in np.asarray(r.payload):
-                self.view_k, self.view_v = compose_seq(
-                    cache, self.view_k, self.view_v, jnp.int32(int(s)))
-            self.mapper.stats.slots_remapped += len(r.versions)
+    def _replay_create(self, cache: pc.PagedKVCache, requests,
+                       shard: int = 0) -> None:
+        with self._view_lock:
+            for r in requests:
+                for s in np.asarray(r.payload):
+                    self.view_k, self.view_v = compose_seq(
+                        cache, self.view_k, self.view_v, jnp.int32(int(s)))
+                self.group[shard].stats.slots_remapped += len(r.versions)
 
-    def _replay_update(self, cache: pc.PagedKVCache, requests) -> None:
-        for r in requests:
-            seq_ids, positions, new_k, new_v = r.payload
-            self.view_k, self.view_v = append_to_view(
-                self.view_k, self.view_v, jnp.asarray(seq_ids),
-                jnp.asarray(positions), new_k, new_v)
-            self.mapper.stats.slots_remapped += len(r.versions)
+    def _replay_update(self, cache: pc.PagedKVCache, requests,
+                       shard: int = 0) -> None:
+        with self._view_lock:
+            for r in requests:
+                seq_ids, positions, new_k, new_v = r.payload
+                self.view_k, self.view_v = append_to_view(
+                    self.view_k, self.view_v, jnp.asarray(seq_ids),
+                    jnp.asarray(positions), new_k, new_v)
+                self.group[shard].stats.slots_remapped += len(r.versions)
 
     def __enter__(self):
         return self

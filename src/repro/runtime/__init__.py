@@ -9,6 +9,7 @@ into every index user — nor create a cycle through ``repro.kvcache``.
 from repro.runtime.mapper import (  # noqa: F401
     GLOBAL_VIEW, FanInRouting, FragmentationRouting, HysteresisRouting,
     MaintenanceStats, Request, ShortcutMapper)
+from repro.runtime.shard_group import MapperGroup  # noqa: F401
 
 _LAZY = {
     "TrainStep": ("repro.runtime.train", "TrainStep"),

@@ -1,0 +1,187 @@
+"""Sharded shortcut runtime: a group of independent mappers (DESIGN.md §4).
+
+The generic runtime (``runtime/mapper.ShortcutMapper``) maintains ONE
+shortcut view family.  Production-scale structures partition their key
+space into shards — each shard a full structure of its own — exactly to
+localize translation state (cf. Utopia's restrictive mappings and
+NDPage's per-unit page tables in PAPERS.md): per-shard view size stays
+bounded (the VMEM-resident regime of the Pallas kernels, DESIGN.md
+§2.4), and maintenance, versioning, and the create-collapses-updates
+batching are confined to one shard instead of the whole structure (the
+paper's §5 shootdown concern).
+
+:class:`MapperGroup` owns N :class:`~repro.runtime.mapper.ShortcutMapper`
+instances with **independent** queues, versions, routing policies, locks
+and (in async mode) threads, plus:
+
+  * a **key → shard router** (client-supplied; Sharded-EH routes on the
+    top bits of the directory hash, the KV manager on ``seq_id % N``);
+  * **aggregated** :class:`~repro.runtime.mapper.MaintenanceStats` and
+    route counters across the group (per-shard stats remain available
+    through each member);
+  * group-wide ``pump()`` / ``wait_in_sync()`` / ``close()`` and the
+    sharded version gate :meth:`in_sync` / :meth:`gate`, keyed by
+    ``{shard: view keys}`` so a read only waits on the shards it
+    actually touches.
+
+The group deliberately does NOT share any state between members: one
+shard's create request can never collapse, gate, or serialize behind
+another shard's updates — that independence is the point, and
+``tests/test_sharded_eh.py`` pins it.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import fields
+from typing import Callable, Dict, Hashable, Iterable, Optional, Sequence
+
+from repro.runtime.mapper import MaintenanceStats, ShortcutMapper
+
+#: ``{shard index: view keys}`` — the sharded analogue of the key lists
+#: the flat runtime takes; ``None`` values mean "all keys of that shard".
+KeysByShard = Dict[int, Optional[Iterable[Hashable]]]
+
+
+class MapperGroup:
+    """N independent shortcut mappers + a router, presented as one unit.
+
+    Parameters
+    ----------
+    mappers:
+        the member :class:`ShortcutMapper` instances, one per shard, in
+        shard order.  The group takes ownership (``close()`` closes all).
+    router:
+        ``f(key) -> shard index`` for single keys.  Optional — clients
+        that bucketize batches themselves (Sharded-EH hashes whole numpy
+        arrays at once) may never call it; :meth:`route` raises if it is
+        needed but absent.
+    """
+
+    def __init__(self, mappers: Sequence[ShortcutMapper], *,
+                 router: Optional[Callable[[Hashable], int]] = None):
+        if not mappers:
+            raise ValueError("MapperGroup needs at least one mapper")
+        self.mappers = list(mappers)
+        self._router = router
+
+    # -- container protocol --------------------------------------------------
+
+    def __len__(self) -> int:
+        return len(self.mappers)
+
+    def __getitem__(self, shard: int) -> ShortcutMapper:
+        return self.mappers[shard]
+
+    def __iter__(self):
+        return iter(self.mappers)
+
+    # -- routing -------------------------------------------------------------
+
+    def route(self, key: Hashable) -> int:
+        """Shard index owning ``key`` (via the client's router)."""
+        if self._router is None:
+            raise ValueError("MapperGroup was built without a router")
+        shard = int(self._router(key))
+        if not 0 <= shard < len(self.mappers):
+            raise IndexError(f"router sent key {key!r} to shard {shard} "
+                             f"of {len(self.mappers)}")
+        return shard
+
+    def mapper_for(self, key: Hashable) -> ShortcutMapper:
+        return self.mappers[self.route(key)]
+
+    # -- aggregated bookkeeping ----------------------------------------------
+
+    @property
+    def stats(self) -> MaintenanceStats:
+        """Sum of all members' stats (a fresh snapshot object; mutate the
+        per-shard ``group[i].stats`` instances, never this one)."""
+        agg = MaintenanceStats()
+        for m in self.mappers:
+            for f in fields(MaintenanceStats):
+                setattr(agg, f.name,
+                        getattr(agg, f.name) + getattr(m.stats, f.name))
+        return agg
+
+    def per_shard_stats(self) -> list:
+        return [m.stats for m in self.mappers]
+
+    @property
+    def routed_shortcut(self) -> int:
+        return sum(m.routed_shortcut for m in self.mappers)
+
+    @property
+    def routed_fallback(self) -> int:
+        return sum(m.routed_fallback for m in self.mappers)
+
+    def count_route(self, used_shortcut: bool, shard: int = 0) -> None:
+        """Count one routed batch, attributed to ``shard`` (batch-level
+        decisions are one event, not one per touched shard)."""
+        self.mappers[shard].count_route(used_shortcut)
+
+    # -- sharded version gate ------------------------------------------------
+
+    def in_sync(self, keys_by_shard: Optional[KeysByShard] = None) -> bool:
+        """True when every involved shard's views are caught up.
+
+        ``keys_by_shard=None`` checks all keys of all shards; a dict
+        restricts the gate to the listed shards (and, per shard, to the
+        listed keys) — the sharded read set."""
+        if keys_by_shard is None:
+            return all(m.in_sync() for m in self.mappers)
+        return all(self.mappers[s].in_sync(keys)
+                   for s, keys in keys_by_shard.items())
+
+    def gate(self, metric: float,
+             keys_by_shard: Optional[KeysByShard] = None) -> bool:
+        """Version gate across the involved shards AND every involved
+        shard's routing policy accepting ``metric``.  Policies are
+        per-shard (independent thresholds / hysteresis state); a batch
+        routes the shortcut only when all of them agree.  Distinct
+        policy *objects* each decide exactly once, without
+        short-circuiting — a policy shared across shards (one object,
+        many members) must see one state transition per gate, not one
+        per shard it happens to back."""
+        shards = (range(len(self.mappers)) if keys_by_shard is None
+                  else sorted(keys_by_shard))
+        if not self.in_sync(keys_by_shard):
+            return False
+        policies, seen = [], set()
+        for s in shards:
+            p = self.mappers[s].routing
+            if id(p) not in seen:
+                seen.add(id(p))
+                policies.append(p)
+        decisions = [bool(p.decide(metric)) for p in policies]
+        return all(decisions)
+
+    # -- group-wide maintenance ----------------------------------------------
+
+    def pump(self, max_requests: int = 1 << 30) -> int:
+        """Synchronously drain every shard's queue (mapper surrogate)."""
+        return sum(m.pump(max_requests) for m in self.mappers)
+
+    def wait_in_sync(self, keys_by_shard: Optional[KeysByShard] = None,
+                     timeout: float = 30.0) -> bool:
+        """Block until the involved shards caught up; one shared deadline
+        across the group (not ``timeout`` per shard)."""
+        deadline = time.monotonic() + timeout
+        shards = (range(len(self.mappers)) if keys_by_shard is None
+                  else sorted(keys_by_shard))
+        ok = True
+        for s in shards:
+            keys = None if keys_by_shard is None else keys_by_shard[s]
+            left = deadline - time.monotonic()
+            ok &= self.mappers[s].wait_in_sync(keys, max(0.0, left))
+        return ok
+
+    def close(self) -> None:
+        for m in self.mappers:
+            m.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False

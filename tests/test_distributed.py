@@ -70,6 +70,45 @@ class TestLogicalSpec:
         assert logical_spec((1,), ("batch",), mesh3) == P()
 
 
+class TestEHSpecs:
+    """Sharded-EH dims place via the same divisibility-aware rules."""
+
+    def test_stacked_lookup_operands(self, mesh):
+        # 16 shards over the data axis; directory/buckets over model;
+        # the probed bucket row (eh_slots) must stay contiguous
+        assert logical_spec((16, 1 << 14), ("eh_shard", "eh_dir"),
+                            mesh) == P("data", "model")
+        assert logical_spec((16, 4096, 64),
+                            ("eh_shard", "eh_buckets", "eh_slots"),
+                            mesh) == P("data", "model")
+
+    def test_indivisible_shards_replicate(self, mesh):
+        # 2 shards cannot split a 16-way data axis -> replicate the
+        # shard dim, directory still lands on model
+        assert logical_spec((2, 1 << 14), ("eh_shard", "eh_dir"),
+                            mesh) == P(None, "model")
+
+    def test_sharded_eh_specs_helper(self):
+        # a real (1x1) mesh: every dim divides, so names resolve in
+        # priority order — exercises the NamedSharding construction
+        import numpy as np
+        from jax.sharding import Mesh
+        from repro.distributed.sharding import sharded_eh_specs
+        real = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                    ("data", "model"))
+
+        class Shaped:
+            def __init__(self, shape):
+                self.shape = shape
+        specs = sharded_eh_specs(
+            {"keys": Shaped((16, 1024)),
+             "directories": Shaped((16, 1 << 14)),
+             "global_depths": Shaped((16,))}, real)
+        assert specs["keys"].spec == P("data")
+        assert specs["directories"].spec == P("data", "model")
+        assert specs["global_depths"].spec == P()
+
+
 class TestParamNames:
     def test_names_cover_all_leaves(self):
         import jax.numpy as jnp

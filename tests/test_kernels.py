@@ -6,7 +6,9 @@ import numpy as np
 import pytest
 
 from repro.kernels import ref
-from repro.kernels.eh_lookup import eh_lookup, shortcut_lookup
+from repro.kernels.eh_lookup import (eh_lookup, sharded_eh_lookup,
+                                     sharded_shortcut_lookup,
+                                     shortcut_lookup)
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.paged_attention import paged_attention
 from repro.kernels.ragged_copy import ragged_copy
@@ -165,6 +167,55 @@ class TestEHKernels:
                                  st.bucket_keys, st.bucket_vals,
                                  st.global_depth)
         np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+    @pytest.mark.parametrize("N", [1, 4])
+    def test_sharded_kernel_matches_per_shard(self, rng, N):
+        """One grid-over-shards dispatch == N independent single-shard
+        calls (the shard loop shares one pallas_call specialization)."""
+        from repro.core import extendible_hashing as eh
+        states, probes = [], []
+        for s in range(N):
+            keys = unique_keys(rng, 150 + 40 * s)
+            st = eh.eh_create(max_global_depth=8, bucket_slots=8,
+                              capacity=256)
+            st = eh.eh_insert_many(
+                st, jnp.asarray(keys),
+                jnp.asarray(np.arange(keys.size, dtype=np.uint32)))
+            states.append(st)
+            probes.append(np.concatenate(
+                [keys, unique_keys(rng, 50, lo=2**31, hi=2**32 - 2)]))
+        K = max(p.size for p in probes)
+        padded = np.zeros((N, K), np.uint32)
+        for s, p in enumerate(probes):
+            padded[s, :p.size] = p
+        out = sharded_eh_lookup(
+            jnp.asarray(padded),
+            jnp.stack([st.directory for st in states]),
+            jnp.stack([st.bucket_keys for st in states]),
+            jnp.stack([st.bucket_vals for st in states]),
+            jnp.asarray([int(st.global_depth) for st in states],
+                        jnp.int32), tile=64)
+        D = states[0].directory.shape[0]
+        for s, st in enumerate(states):
+            want = eh_lookup(jnp.asarray(padded[s]), st.directory[:D],
+                             st.bucket_keys, st.bucket_vals,
+                             st.global_depth, tile=64)
+            np.testing.assert_array_equal(np.asarray(out[s]),
+                                          np.asarray(want))
+        # shortcut flavour over shape-uniform composed views
+        V = 1 << max(int(st.global_depth) for st in states)
+        views = [eh.compose_shortcut(st, V) for st in states]
+        out_sc = sharded_shortcut_lookup(
+            jnp.asarray(padded),
+            jnp.stack([vk for vk, _ in views]),
+            jnp.stack([vv for _, vv in views]),
+            jnp.asarray([int(st.global_depth) for st in states],
+                        jnp.int32), tile=64)
+        for s, st in enumerate(states):
+            want = shortcut_lookup(jnp.asarray(padded[s]), *views[s],
+                                   st.global_depth, tile=64)
+            np.testing.assert_array_equal(np.asarray(out_sc[s]),
+                                          np.asarray(want))
 
     def test_shortcut_kernel_matches_traditional(self, rng):
         from repro.core import extendible_hashing as eh
