@@ -7,9 +7,17 @@ plus the maintenance cost of keeping the view in sync (the async replay),
 mirroring Table 1's economics at the KV-cache layer.  The TPU-scale
 version of this comparison is the dry-run roofline delta
 (EXPERIMENTS.md §Perf, decode cells).
+
+The ``--num-shards`` sweep measures **replay throughput** of the
+per-shard view arrays (DESIGN.md §4.2): N shard replay threads drain the
+same append workload, once through the lock-free per-shard manager and
+once through a reconstruction of the pre-sharding arrangement (ONE
+whole-batch view pair, every read-modify-write serialized on one global
+view lock) — the scaling-vs-locked-baseline curve of the removed lock.
 """
 from __future__ import annotations
 
+import threading
 import time
 
 import jax
@@ -18,11 +26,107 @@ import numpy as np
 
 from benchmarks.common import Row, sync, timeit
 from repro.kvcache import paged_cache as pc
-from repro.kvcache.shortcut_cache import (ShortcutKVManager, compose_seq,
-                                          slice_context)
+from repro.kvcache.shortcut_cache import (ShortcutKVManager, append_to_view,
+                                          compose_seq, slice_context)
 
 
-def run(scale: float = 1.0 / 64):
+def _impose_locked_baseline(mgr, n_seqs: int, cap: int) -> None:
+    """Reconstruct the pre-sharding arrangement on a live manager: ONE
+    whole-batch (view_k, view_v) pair shared by every shard's replay,
+    each read-modify-write serialized on a single global view lock (and
+    copying the full whole-batch arrays, not a shard's slice) — exactly
+    what the per-shard registry replaced."""
+    L, _, _, KV, hd = mgr.cache.k_pool.shape
+    state = {"views": (jnp.zeros((L, n_seqs, cap, KV, hd), jnp.float32),
+                       jnp.zeros((L, n_seqs, cap, KV, hd), jnp.float32))}
+    view_lock = threading.Lock()
+
+    def replay_create(snap, reqs, shard):
+        with view_lock:
+            vk, vv = state["views"]
+            for r in reqs:
+                for s in np.asarray(r.payload):
+                    vk, vv = compose_seq(snap, vk, vv, jnp.int32(int(s)),
+                                         jnp.int32(int(s)))
+            state["views"] = (vk, vv)
+
+    def replay_update(snap, reqs, shard):
+        with view_lock:
+            vk, vv = state["views"]
+            for r in reqs:
+                seq_ids, positions, nk, nv = r.payload
+                vk, vv = append_to_view(vk, vv, jnp.asarray(seq_ids),
+                                        jnp.asarray(positions), nk, nv)
+            state["views"] = (vk, vv)
+
+    for i, m in enumerate(mgr.group):
+        m._replay_create = lambda snap, reqs, shard=i: \
+            replay_create(snap, reqs, shard)
+        m._replay_update = lambda snap, reqs, shard=i: \
+            replay_update(snap, reqs, shard)
+        m._view_arrays = lambda: state["views"]
+
+
+def replay_throughput(num_shards: int, *, n_seqs: int = 32,
+                      appends: int = 32, kv_heads: int = 2,
+                      head_dim: int = 128, rounds: int = 3,
+                      locked_baseline: bool = False) -> float:
+    """Token rows replayed per second with one pump thread per shard
+    (median over ``rounds`` enqueue+drain cycles).
+
+    ``locked_baseline=True`` measures the identical workload through the
+    pre-sharding replay path (:func:`_impose_locked_baseline`); the pair
+    isolates what the per-shard split buys — no serialization AND
+    1/N-sized copies per replay."""
+    bs = 4
+    cap = -(-(bs + rounds * appends + 2) // bs) * bs
+    rng = np.random.default_rng(7)
+    cache = pc.cache_create(2, n_seqs * (cap // bs) * 2, bs, kv_heads,
+                            head_dim, n_seqs, cap // bs,
+                            dtype=jnp.float32)
+    with ShortcutKVManager(cache, seq_capacity=cap,
+                           num_shards=num_shards) as mgr:
+        if locked_baseline:
+            _impose_locked_baseline(mgr, n_seqs, cap)
+        k = jnp.asarray(rng.normal(
+            size=(2, n_seqs, bs, kv_heads, head_dim)).astype(np.float32))
+        mgr.prefill(np.arange(n_seqs), k, -k)
+        mgr.pump()
+        all_ids = np.arange(n_seqs)
+        nk = jnp.asarray(rng.normal(
+            size=(2, n_seqs, kv_heads, head_dim)).astype(np.float32))
+        mgr.append(all_ids, nk, -nk)     # warm the jit variants
+        mgr.pump()
+        rates = []
+        for _ in range(rounds):
+            for _ in range(appends):
+                mgr.append(all_ids, nk, -nk)
+            threads = [threading.Thread(target=mgr.group[s].pump)
+                       for s in range(num_shards)]
+            t0 = time.perf_counter()
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            rates.append(appends * n_seqs / (time.perf_counter() - t0))
+    return float(np.median(rates))
+
+
+def replay_scaling_rows(scale: float, num_shards=(1, 2, 4)) -> list:
+    appends = max(8, int(2048 * scale))
+    rows = []
+    for n in num_shards:
+        tp = replay_throughput(n, appends=appends)
+        locked = replay_throughput(n, appends=appends,
+                                   locked_baseline=True)
+        rows.append(Row(
+            "kv_shortcut", f"replay_throughput_shards{n}", tp, "rows/s",
+            f"lock-free per-shard views; locked 1-view baseline "
+            f"{locked:.0f} rows/s ({tp / max(locked, 1e-9):.2f}x)"))
+    return rows
+
+
+def run(scale: float = 1.0 / 64, num_shards=(1, 2, 4)):
     L, KV, hd, bs = 4, 4, 64, 16
     B = 8
     S = max(256, int(32768 * scale * 4))
@@ -70,7 +174,8 @@ def run(scale: float = 1.0 / 64):
     view_v = jnp.zeros_like(view_k)
     t0 = time.perf_counter()
     for s in range(B):
-        view_k, view_v = compose_seq(cache, view_k, view_v, jnp.int32(s))
+        view_k, view_v = compose_seq(cache, view_k, view_v, jnp.int32(s),
+                                     jnp.int32(s))
     sync(view_k)
     t_compose = (time.perf_counter() - t0) * 1e3
     rows.append(Row("kv_shortcut", "compose_view_all_seqs", t_compose,
@@ -95,15 +200,26 @@ def run(scale: float = 1.0 / 64):
     # per-token append maintenance (update request)
     nk = jnp.asarray(rng.normal(size=(L, B, KV, hd)).astype(np.float32))
     nv = jnp.asarray(rng.normal(size=(L, B, KV, hd)).astype(np.float32))
-    from repro.kvcache.shortcut_cache import append_to_view
     pos = jnp.full((B,), S - 1, jnp.int32)
     t_append = timeit(append_to_view, view_k, view_v, seq_ids, pos,
                       nk, nv) * 1e6
     rows.append(Row("kv_shortcut", "append_update_request", t_append,
                     "us/step", "per-decode-token view maintenance"))
+
+    # replay throughput: lock-free per-shard views vs the locked
+    # whole-batch baseline, per shard count
+    rows += replay_scaling_rows(scale, num_shards)
     return rows
 
 
 if __name__ == "__main__":
+    import argparse
     from benchmarks.common import emit
-    emit(run())
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=1.0 / 64)
+    ap.add_argument("--num-shards", default="1,2,4",
+                    help="comma-separated shard counts for the replay "
+                         "throughput sweep")
+    args = ap.parse_args()
+    emit(run(scale=args.scale,
+             num_shards=tuple(int(x) for x in args.num_shards.split(","))))

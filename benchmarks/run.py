@@ -1,13 +1,17 @@
 """Benchmark harness entry point: one function per paper table/figure.
 
 ``python -m benchmarks.run [--scale S] [--only table1,fig2,...]
-                           [--json PATH]``
+                           [--json PATH] [--compare PREV.json]``
 
 Prints ``bench,name,value,unit,extra`` CSV rows; ``--json PATH``
 additionally writes the full Row list as structured JSON
 (``bench, name, value, unit, extra, wall``) — the machine-readable perf
-trajectory CI archives per commit.  The roofline table (§Roofline, from
-the multi-pod dry-run) is appended when dry-run records exist under
+trajectory CI archives per commit.  ``--compare PREV.json`` diffs the
+run against a previous ``--json`` artifact and prints a WARNING for
+every row regressed by more than 2x (warn only — the exit code is
+unaffected until a few commits of history make failing safe; ROADMAP
+"perf trajectory").  The roofline table (§Roofline, from the multi-pod
+dry-run) is appended when dry-run records exist under
 results/dryrun_baseline.
 """
 from __future__ import annotations
@@ -25,6 +29,56 @@ ALL = ("table1", "fig2", "fig4", "fig5", "fig7", "fig8", "kv_shortcut",
        "sharded")
 
 
+def _regression_ratio(row: Row, prev: dict) -> float:
+    """How many times worse ``row`` is than ``prev`` (1.0 = unchanged);
+    0.0 for rows whose unit encodes no better/worse direction."""
+    cur_v, prev_v = float(row.value), float(prev["value"])
+    if cur_v <= 0 or prev_v <= 0:
+        return 0.0
+    base = row.unit.split("/")[0]
+    if base in ("s", "ms", "us", "ns"):       # time-like: lower is better
+        return cur_v / prev_v
+    if row.unit.endswith("/s"):               # throughput: higher is better
+        return prev_v / cur_v
+    return 0.0
+
+
+def compare_to_previous(rows: list, prev_path: str,
+                        factor: float = 2.0) -> int:
+    """Print a WARNING per row regressed >``factor``x vs the previous
+    ``--json`` artifact; returns the number of warnings.  A missing or
+    unreadable artifact is a note, not an error (first run, expired
+    artifact)."""
+    try:
+        with open(prev_path) as f:
+            prev_rows = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"compare: no usable previous artifact at {prev_path} "
+              f"({e}); skipping perf diff", file=sys.stderr)
+        return 0
+    prev = {(r["bench"], r["name"]): r for r in prev_rows}
+    warned = 0
+    for r in rows:
+        if r.name.startswith("_"):            # _bench_wall / _bench_error
+            continue
+        p = prev.get((r.bench, r.name))
+        if p is None or p.get("unit") != r.unit:
+            continue
+        ratio = _regression_ratio(r, p)
+        if ratio > factor:
+            warned += 1
+            print(f"WARNING: perf regression {r.bench},{r.name}: "
+                  f"{p['value']:.6g} -> {r.value:.6g} {r.unit} "
+                  f"({ratio:.2f}x worse)", file=sys.stderr)
+    if warned:
+        print(f"compare: {warned} row(s) regressed >{factor}x vs "
+              f"{prev_path} (warning only)", file=sys.stderr)
+    else:
+        print(f"compare: no >{factor}x regressions vs {prev_path}",
+              file=sys.stderr)
+    return warned
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=float, default=1.0 / 100,
@@ -33,6 +87,9 @@ def main(argv=None) -> int:
                     help="comma-separated subset of: " + ",".join(ALL))
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write all rows as structured JSON to PATH")
+    ap.add_argument("--compare", default=None, metavar="PREV.json",
+                    help="diff against a previous --json artifact and "
+                         "warn on >2x regressions (exit code unaffected)")
     ap.add_argument("--skip-roofline", action="store_true")
     args = ap.parse_args(argv)
     wanted = [b for b in args.only.split(",") if b] or list(ALL)
@@ -62,6 +119,9 @@ def main(argv=None) -> int:
             json.dump([dataclasses.asdict(r) for r in rows], f, indent=2)
             f.write("\n")
         print(f"wrote {len(rows)} rows to {args.json}", file=sys.stderr)
+
+    if args.compare:
+        compare_to_previous(rows, args.compare)
 
     if not args.skip_roofline:
         import os

@@ -51,21 +51,14 @@ from repro.core import extendible_hashing as eh
 from repro.core.hashing import HASH_C1
 from repro.core.shortcut_eh import ShortcutEH
 from repro.runtime.mapper import GLOBAL_VIEW, MaintenanceStats
-from repro.runtime.shard_group import MapperGroup
+# The generic cross-shard batching helpers live with the sharded runtime
+# (shared with the KV manager's cross-shard get_context); re-exported
+# here because they are part of this module's historical public API.
+from repro.runtime.shard_group import (MapperGroup, pad_batch,
+                                       partition_by_shard, shard_order)
 
 __all__ = ["ShardedShortcutEH", "partition_by_shard", "shard_of_keys",
            "shard_order"]
-
-# Static per-shard key-batch capacities (bounded set => bounded number of
-# jit/pallas variants), mirroring shortcut_eh._CHUNK_SIZES.
-_BATCH_SIZES = (64, 256, 1024, 4096, 16384, 65536, 262144)
-
-
-def _pad_batch(n: int) -> int:
-    for c in _BATCH_SIZES:
-        if n <= c:
-            return c
-    return -(-n // _BATCH_SIZES[-1]) * _BATCH_SIZES[-1]
 
 
 def shard_of_keys(keys: np.ndarray, shard_bits: int) -> np.ndarray:
@@ -76,40 +69,6 @@ def shard_of_keys(keys: np.ndarray, shard_bits: int) -> np.ndarray:
     h = (np.asarray(keys, np.uint64) * np.uint64(HASH_C1)) \
         & np.uint64(0xFFFFFFFF)
     return (h >> np.uint64(32 - shard_bits)).astype(np.int64)
-
-
-def shard_order(sid: np.ndarray, num_shards: int):
-    """The one stable argsort pass every batched operation shares:
-    returns ``(order, counts, starts)`` — shard-sort permutation,
-    per-shard key counts, and each shard's offset in the sorted order."""
-    order = np.argsort(sid, kind="stable")
-    counts = np.bincount(sid, minlength=num_shards)
-    starts = np.zeros(num_shards, np.int64)
-    np.cumsum(counts[:-1], out=starts[1:])
-    return order, counts, starts
-
-
-def partition_by_shard(keys: np.ndarray, sid: np.ndarray, num_shards: int,
-                       cap: int, fill: int = 0, *, order=None, counts=None,
-                       starts=None):
-    """Bucketize ``keys`` per shard (via :func:`shard_order`, reused when
-    the caller already ran it to size ``cap``).
-
-    Returns ``(padded, counts, order, rank)``: ``padded`` is
-    (num_shards, cap) with shard s's keys in ``padded[s, :counts[s]]``
-    and ``fill`` elsewhere; ``order``/``rank`` invert the permutation —
-    input element ``order[i]`` sits at ``padded[sid[order][i],
-    rank[i]]``, so per-shard results scatter back to input order with
-    ``out[order] = results[sid[order], rank]``.
-    """
-    keys = np.asarray(keys)
-    if order is None or counts is None or starts is None:
-        order, counts, starts = shard_order(sid, num_shards)
-    sid_sorted = sid[order]
-    rank = np.arange(keys.size, dtype=np.int64) - starts[sid_sorted]
-    padded = np.full((num_shards, cap), fill, keys.dtype)
-    padded[sid_sorted, rank] = keys[order]
-    return padded, counts, order, rank
 
 
 class ShardedShortcutEH:
@@ -182,7 +141,7 @@ class ShardedShortcutEH:
             return self.shards[0].lookup(keys)
         sid = self.shard_of(keys)
         order, counts, starts = shard_order(sid, self.num_shards)
-        cap = _pad_batch(int(counts.max()) if keys.size else 1)
+        cap = pad_batch(int(counts.max()) if keys.size else 1)
         padded, counts, order, rank = partition_by_shard(
             keys, sid, self.num_shards, cap,
             order=order, counts=counts, starts=starts)
@@ -207,21 +166,26 @@ class ShardedShortcutEH:
         keys = np.asarray(keys, np.uint32)
         sid = self.shard_of(keys)
         order, counts, starts = shard_order(sid, self.num_shards)
-        cap = _pad_batch(int(counts.max()) if keys.size else 1)
+        cap = pad_batch(int(counts.max()) if keys.size else 1)
         padded, counts, order, rank = partition_by_shard(
             keys, sid, self.num_shards, cap,
             order=order, counts=counts, starts=starts)
-        # ONE snapshot per shard (view tuples swap atomically; EHStates
-        # are reassigned whole) so a concurrent async replay can neither
-        # tear a view nor make the uniformity check and the stack
-        # disagree about shapes.
+        # Gate every shard FIRST (each policy decides exactly once — no
+        # short-circuit), snapshot after: a replay landing in between
+        # publishes a strictly newer view, which the gates' verdict
+        # still covers; snapshotting first would let the gates certify
+        # stale tuples.  ONE snapshot per shard (view tuples swap
+        # atomically; EHStates are reassigned whole) so a concurrent
+        # async replay can neither tear a view nor make the uniformity
+        # check and the stack disagree about shapes.
+        gates = [s.mapper.gate(s.avg_fan_in(), [GLOBAL_VIEW])
+                 for s in self.shards]
         views = [s.view_snapshot() for s in self.shards]
         states = [s.state for s in self.shards]
         use_shortcut = (
-            all(v is not None for v in views)
-            and len({v[2] for v in views}) == 1
-            and all(s.mapper.gate(s.avg_fan_in(), [GLOBAL_VIEW])
-                    for s in self.shards))
+            all(gates)
+            and all(v is not None for v in views)
+            and len({v[2] for v in views}) == 1)
         self.group.count_route(use_shortcut)
         keys_dev = jnp.asarray(padded)
         if use_shortcut:

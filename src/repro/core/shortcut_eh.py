@@ -167,13 +167,18 @@ class ShortcutEH:
     def lookup(self, keys) -> jax.Array:
         """Route through the shortcut when in sync and fan-in permits."""
         keys = jnp.asarray(keys, jnp.uint32)
+        # gate FIRST, snapshot after: a replay landing in between
+        # publishes a strictly newer view, which the gate's verdict
+        # still covers; snapshotting first would let the gate certify
+        # a stale tuple (async mode could then serve pre-insert data)
+        use = self.mapper.gate(self.avg_fan_in(), [GLOBAL_VIEW])
         view = self._view     # single read: the replay swap is atomic
-        use = (view is not None
-               and self.mapper.gate(self.avg_fan_in(), [GLOBAL_VIEW]))
+        use = use and view is not None
         self.mapper.count_route(use)
         if use:
-            return eh.shortcut_lookup_many(
-                view[0], view[1], self.state.global_depth, keys)
+            # the tuple's own view_log2, never the live global_depth: a
+            # doubling after the snapshot would index past the view
+            return eh.shortcut_lookup_many(view[0], view[1], view[2], keys)
         return eh.eh_lookup_many(self.state, keys)
 
     def use_shortcut(self) -> bool:

@@ -78,6 +78,11 @@ def default_rules(mesh: Mesh) -> ShardingRules:
         "eh_dir": (("model",), ("data",)),
         "eh_buckets": (("model",), ("data",)),
         "eh_slots": (),
+        # sharded KV views (kvcache/shortcut_cache, num_shards=N): the
+        # per-shard (L, seqs_per_shard, S_cap, KV, hd) pairs stack on a
+        # leading `kv_shard` dim; like `eh_shard`, one shard per data
+        # slice keeps each shard's replay and row-gather local.
+        "kv_shard": (dp, ("data",)),
         # generic replicated
         "layer": (),
     })
@@ -250,6 +255,28 @@ def sharded_eh_specs(operands: dict, mesh: Mesh,
     the module's contract."""
     return {k: NamedSharding(
                 mesh, logical_spec(v.shape, EH_LOOKUP_NAMES[k], mesh, rules))
+            for k, v in operands.items()}
+
+
+#: Logical names of the stacked per-shard KV view arrays
+#: (``kvcache/shortcut_cache.ShortcutKVManager`` with ``num_shards=N``):
+#: each shard's (L, seqs_per_shard, S_cap, KV, hd) pair stacked on a
+#: leading ``kv_shard`` dim, e.g. ``jnp.stack([k for k, _ in views])``.
+KV_VIEW_NAMES = {
+    "view_k": ("kv_shard", "layer", "kv_seqs", "ctx", "kv_heads",
+               "head_dim"),
+    "view_v": ("kv_shard", "layer", "kv_seqs", "ctx", "kv_heads",
+               "head_dim"),
+}
+
+
+def sharded_kv_view_specs(operands: dict, mesh: Mesh,
+                          rules: Optional[ShardingRules] = None) -> dict:
+    """NamedShardings for stacked per-shard KV view arrays, keyed by the
+    :data:`KV_VIEW_NAMES` operand names; same divisibility-aware
+    replicate-don't-fail contract as :func:`sharded_eh_specs`."""
+    return {k: NamedSharding(
+                mesh, logical_spec(v.shape, KV_VIEW_NAMES[k], mesh, rules))
             for k, v in operands.items()}
 
 

@@ -16,21 +16,25 @@ every read (one version per sequence — a sequence is our directory unit),
 and a fragmentation statistic (the fan-in analogue) decides routing
 (:class:`~repro.runtime.mapper.FragmentationRouting`).
 
-**Sharded mode** (``num_shards > 1``): sequences partition across a
-:class:`~repro.runtime.shard_group.MapperGroup` by ``seq_id % N`` — each
-shard owns its sequences' versions, FIFO queue, collapse scope, routing
-policy and (async) thread, so a prefill burst re-linearizing one shard's
-sequences never collapses or gates another shard's decode appends
-(DESIGN.md §4, sharded mappers).  The view arrays stay whole-batch
-(decode reads them as one tensor); concurrent shard threads mutate
-disjoint sequence rows but share the array *objects*, so replay
-read-modify-writes serialize on one internal view lock — queueing,
-versioning and gating stay fully shard-independent.
+**Sharded mode** (``num_shards > 1``, DESIGN.md §4.2): sequences partition
+across a :class:`~repro.runtime.shard_group.MapperGroup` by
+``seq_id % N``, and — unlike the first sharded iteration, which kept one
+whole-batch view pair behind a global view lock — the view tensors are
+**per shard** too: shard ``s`` owns one
+``(L, seqs_per_shard, S_cap, KV, hd)`` k/v pair holding the rows of its
+sequences (shard-local row ``seq_id // N``), registered in a
+:class:`~repro.runtime.shard_group.ShardViewRegistry`.  A replay thread
+therefore mutates only arrays its shard owns and publishes the result as
+ONE atomic tuple swap of its registry slot — the replay path acquires no
+cross-shard lock (there is no view lock at all), and a reader snapshots a
+slot once so it can never pair a ``view_k`` from one publication with the
+``view_v`` of another.  Cross-shard reads (``get_context`` over a batch
+spanning shards) bucketize ``seq_id``s per shard with the same
+argsort/pad/scatter-back pass as ``sharded_eh.lookup_batched``.
 """
 from __future__ import annotations
 
 import contextlib
-import threading
 from typing import Optional
 
 import jax
@@ -39,17 +43,20 @@ import numpy as np
 
 from repro.kvcache import paged_cache as pc
 from repro.runtime.mapper import FragmentationRouting, ShortcutMapper
-from repro.runtime.shard_group import MapperGroup
+from repro.runtime.shard_group import (MapperGroup, ShardViewRegistry,
+                                       partition_by_shard, shard_order)
 
 
 # -- functional core -----------------------------------------------------------
 
 @jax.jit
 def compose_seq(cache: pc.PagedKVCache, view_k: jax.Array, view_v: jax.Array,
-                seq_id: jax.Array):
-    """Create-request replay: linearize one sequence into the view.
+                seq_id: jax.Array, row: jax.Array):
+    """Create-request replay: linearize one sequence into its shard's view.
 
-    view_k/view_v: (L, max_seqs, S_cap, KV, hd)."""
+    view_k/view_v: (L, rows_per_shard, S_cap, KV, hd); ``seq_id`` indexes
+    the authoritative cache, ``row`` the shard-local view row owning it
+    (``seq_id // num_shards``; with one shard, ``row == seq_id``)."""
     table = jnp.maximum(cache.block_tables[seq_id], 0)    # (MB,)
     L = cache.k_pool.shape[0]
     bs = cache.block_size
@@ -58,27 +65,28 @@ def compose_seq(cache: pc.PagedKVCache, view_k: jax.Array, view_v: jax.Array,
     k_lin = cache.k_pool[:, table].reshape((L, MB * bs) + kv_shape)
     v_lin = cache.v_pool[:, table].reshape((L, MB * bs) + kv_shape)
     cap = view_k.shape[2]
-    return (view_k.at[:, seq_id, :].set(k_lin[:, :cap]),
-            view_v.at[:, seq_id, :].set(v_lin[:, :cap]))
+    return (view_k.at[:, row, :].set(k_lin[:, :cap]),
+            view_v.at[:, row, :].set(v_lin[:, :cap]))
 
 
 @jax.jit
-def append_to_view(view_k: jax.Array, view_v: jax.Array, seq_ids: jax.Array,
+def append_to_view(view_k: jax.Array, view_v: jax.Array, rows: jax.Array,
                    positions: jax.Array, new_k: jax.Array,
                    new_v: jax.Array):
     """Update-request replay: write one token row per sequence
-    (the per-slot ``mmap`` analogue).  new_k/new_v: (L, B, KV, hd)."""
-    return (view_k.at[:, seq_ids, positions].set(new_k),
-            view_v.at[:, seq_ids, positions].set(new_v))
+    (the per-slot ``mmap`` analogue) at the given shard-local rows.
+    new_k/new_v: (L, B, KV, hd)."""
+    return (view_k.at[:, rows, positions].set(new_k),
+            view_v.at[:, rows, positions].set(new_v))
 
 
 @jax.jit
-def slice_context(view_k: jax.Array, view_v: jax.Array, seq_ids: jax.Array):
-    """The shortcut access path: a gather on the *sequence* axis only —
+def slice_context(view_k: jax.Array, view_v: jax.Array, rows: jax.Array):
+    """The shortcut access path: a gather on the *row* axis only —
     token positions are pure address arithmetic (contiguous stream).
     Returns (L, B, KV, S, hd) (attention-native layout)."""
-    return (view_k[:, seq_ids].transpose(0, 1, 3, 2, 4),
-            view_v[:, seq_ids].transpose(0, 1, 3, 2, 4))
+    return (view_k[:, rows].transpose(0, 1, 3, 2, 4),
+            view_v[:, rows].transpose(0, 1, 3, 2, 4))
 
 
 # -- host orchestration ----------------------------------------------------------
@@ -93,8 +101,9 @@ class ShortcutKVManager:
     nearly-contiguous blocks anyway, and maintenance would be pure
     overhead — the TLB-thrashing lesson of §3.2 mapped to DMA terms).
 
-    ``num_shards`` partitions sequences across independent mappers
-    (``seq_id % num_shards`` router); the default 1 is exactly the
+    ``num_shards`` partitions sequences across independent mappers AND
+    independent view tensors (``seq_id % num_shards`` router, shard-local
+    view row ``seq_id // num_shards``); the default 1 is exactly the
     previous single-mapper behaviour.  A custom ``routing`` policy is
     shared across shards — pass ``None`` for independent per-shard
     :class:`FragmentationRouting` instances.
@@ -109,10 +118,17 @@ class ShortcutKVManager:
         L, _, bs, KV, hd = cache.k_pool.shape
         max_seqs = cache.block_tables.shape[0]
         self.cache = cache
-        self.view_k = jnp.zeros((L, max_seqs, seq_capacity, KV, hd),
-                                cache.k_pool.dtype)
-        self.view_v = jnp.zeros_like(self.view_k)
-        self._view_lock = threading.Lock()
+        self.num_shards = num_shards
+        self.seqs_per_shard = -(-max_seqs // num_shards)
+        # One (view_k, view_v) pair per shard; sharing the initial zero
+        # arrays across slots is safe — replays are functional (`.at[]`)
+        # and publication swaps whole tuples.
+        self.views = ShardViewRegistry(num_shards)
+        zk = jnp.zeros((L, self.seqs_per_shard, seq_capacity, KV, hd),
+                       cache.k_pool.dtype)
+        zv = jnp.zeros_like(zk)
+        for s in range(num_shards):
+            self.views.publish(s, (zk, zv))
         self.group = MapperGroup(
             [ShortcutMapper(
                 replay_create=lambda snap, reqs, shard=i:
@@ -120,13 +136,13 @@ class ShortcutKVManager:
                 replay_update=lambda snap, reqs, shard=i:
                     self._replay_update(snap, reqs, shard),
                 snapshot=lambda: self.cache,
-                view_arrays=lambda: (self.view_k, self.view_v),
+                view_arrays=lambda shard=i: self.views.arrays(shard),
                 routing=routing or FragmentationRouting(float(frag_threshold)),
                 poll_interval=poll_interval, async_mapper=async_mapper,
                 name=f"kv-mapper-{i}")
              for i in range(num_shards)],
-            router=lambda seq_id: int(seq_id) % num_shards)
-        self.num_shards = num_shards
+            router=lambda seq_id: int(seq_id) % num_shards,
+            views=self.views)
 
     # -- delegated bookkeeping (kept for API compatibility) ------------------
 
@@ -169,7 +185,9 @@ class ShortcutKVManager:
     @contextlib.contextmanager
     def _shard_locks(self, shards):
         """Hold the involved shards' runtime locks (ascending order — the
-        lock hierarchy that makes multi-shard mutations deadlock-free)."""
+        lock hierarchy that makes multi-shard mutations deadlock-free).
+        Main-thread (authoritative) mutations only; the replay path never
+        enters here."""
         with contextlib.ExitStack() as stack:
             for r in sorted(shards):
                 stack.enter_context(self.group[r].lock)
@@ -185,32 +203,40 @@ class ShortcutKVManager:
         with self._shard_locks(by_shard):
             self.cache = pc.write_prefill(
                 self.cache, jnp.asarray(seq_ids), k, v)
-            versions = {r: self.group[r].record(keys)
-                        for r, keys in by_shard.items()}
-        for r, keys in by_shard.items():
-            self.group[r].submit_create(keys, versions[r],
-                                        payload=np.asarray(keys))
+            # submit under the same locks that assigned the versions:
+            # requests then enter each shard's FIFO in version order, so
+            # a replayed later version can never publish in_sync while an
+            # earlier-version request is still unsubmitted
+            for r, keys in by_shard.items():
+                self.group[r].submit_create(keys, self.group[r].record(keys),
+                                            payload=np.asarray(keys))
 
     def append(self, seq_ids: np.ndarray, new_k: jax.Array,
                new_v: jax.Array):
         """Synchronous paged append + async view-row update request on
         each sequence's owning shard (payload sliced per shard)."""
         seq_ids = np.asarray(seq_ids)
+        # partition through the group router — the one key->shard map
+        # every operation shares
         shard_of = np.asarray([self.group.route(int(s)) for s in seq_ids])
         by_shard = {r: [int(s) for s in seq_ids[shard_of == r]]
                     for r in sorted(set(shard_of.tolist()))}
-        positions = np.asarray(self.cache.seq_lens)[seq_ids]
         with self._shard_locks(by_shard):
+            # positions must be read under the shard locks, atomically
+            # with the authoritative append: a racing append to the same
+            # sequence would otherwise hand two update requests the same
+            # (stale) position and the view would lose a token row
+            positions = np.asarray(self.cache.seq_lens)[seq_ids]
             self.cache = pc.append_tokens(
                 self.cache, jnp.asarray(seq_ids), new_k, new_v)
-            versions = {r: self.group[r].record(keys)
-                        for r, keys in by_shard.items()}
-        for r, keys in by_shard.items():
-            idx = np.nonzero(shard_of == r)[0]
-            self.group[r].submit_update(
-                keys, versions[r],
-                payload=(seq_ids[idx], positions[idx],
-                         new_k[:, idx], new_v[:, idx]))
+            # submit under the locks (see prefill): version order ==
+            # FIFO order per shard
+            for r, keys in by_shard.items():
+                idx = np.nonzero(shard_of == r)[0]
+                self.group[r].submit_update(
+                    keys, self.group[r].record(keys),
+                    payload=(seq_ids[idx], positions[idx],
+                             new_k[:, idx], new_v[:, idx]))
 
     def release(self, seq_ids: np.ndarray):
         """Synchronous release; the per-sequence views become permanently
@@ -236,15 +262,64 @@ class ShortcutKVManager:
         return "paged"
 
     def get_context(self, seq_ids: np.ndarray, route: Optional[str] = None):
-        """Materialized (k_ctx, v_ctx) for decode + the route taken."""
+        """Materialized (k_ctx, v_ctx) for decode + the route taken.
+
+        The shortcut path reads per-shard view tensors: a batch confined
+        to one shard is a single row-gather on that shard's arrays; a
+        batch spanning shards is bucketized per shard (one stable
+        argsort, static padded sub-batches) and scattered back to input
+        order — the ``sharded_eh.lookup_batched`` pattern at the KV
+        layer."""
+        seq_ids = np.asarray(seq_ids)
         route = route or self.route(seq_ids)
+        # batch-level decision -> group-level counter (a multi-shard
+        # batch must not skew shard 0's per-shard stats)
         self.group.count_route(route == "shortcut")
-        ids = jnp.asarray(seq_ids)
         if route == "shortcut":
-            k, v = slice_context(self.view_k, self.view_v, ids)
+            k, v = self._shortcut_context(seq_ids)
         else:
-            k, v = pc.gather_context(self.cache, ids)
+            k, v = pc.gather_context(self.cache, jnp.asarray(seq_ids))
         return k, v, route
+
+    def _shortcut_context(self, seq_ids: np.ndarray):
+        """Cross-shard view read in input order (no locks: one registry
+        snapshot per shard is consistent by construction)."""
+        sid = seq_ids % self.num_shards
+        rows = seq_ids // self.num_shards
+        views = self.views.snapshot_all()
+        involved = np.unique(sid)
+        if involved.size <= 1:
+            shard = int(involved[0]) if involved.size else 0
+            k, v = views[shard]
+            return slice_context(k, v, jnp.asarray(rows))
+        order, counts, starts = shard_order(sid, self.num_shards)
+        # pad per-shard row counts to the next power of two — each index
+        # row gathers a full (L, S_cap, KV, hd) context slab, so the EH
+        # key ladder's 64-entry floor would be megabytes of waste; jit
+        # variants stay bounded by log2(seqs_per_shard)
+        cap = 1 << max(0, int(counts.max()) - 1).bit_length()
+        padded, counts, order, rank = partition_by_shard(
+            rows, sid, self.num_shards, cap,
+            order=order, counts=counts, starts=starts)
+        parts_k, parts_v = [], []
+        part_of = np.full(self.num_shards, -1)
+        for s in range(self.num_shards):
+            if counts[s]:
+                part_of[s] = len(parts_k)
+                k, v = views[s]
+                ks, vs = slice_context(k, v, jnp.asarray(padded[s]))
+                parts_k.append(ks)
+                parts_v.append(vs)
+        stack_k = jnp.stack(parts_k)        # (M, L, cap, KV, S, hd)
+        stack_v = jnp.stack(parts_v)
+        # scatter back: input element j lives at (part_of[sid[j]],
+        # rank_orig[j]) in the stacks (rank in sorted order -> original)
+        rank_orig = np.empty(seq_ids.size, np.int64)
+        rank_orig[order] = rank
+        pi = jnp.asarray(part_of[sid])
+        ri = jnp.asarray(rank_orig)
+        return (jnp.moveaxis(stack_k[pi, :, ri], 0, 1),
+                jnp.moveaxis(stack_v[pi, :, ri], 0, 1))
 
     def seq_lens(self, seq_ids: np.ndarray) -> np.ndarray:
         return np.asarray(self.cache.seq_lens)[seq_ids]
@@ -261,25 +336,35 @@ class ShortcutKVManager:
         self.group.close()
 
     # -- replay callables (the only KV-specific maintenance code) ------------
+    #
+    # Lock-free: each replay runs on its shard's single mapper (thread or
+    # pump caller), mutates only arrays reachable from its own registry
+    # slot, and publishes once per run as one atomic tuple swap.  No
+    # other shard's state is read or written — concurrent shard replays
+    # never serialize on anything.
 
     def _replay_create(self, cache: pc.PagedKVCache, requests,
                        shard: int = 0) -> None:
-        with self._view_lock:
-            for r in requests:
-                for s in np.asarray(r.payload):
-                    self.view_k, self.view_v = compose_seq(
-                        cache, self.view_k, self.view_v, jnp.int32(int(s)))
-                self.group[shard].stats.slots_remapped += len(r.versions)
+        vk, vv = self.views.snapshot(shard)
+        for r in requests:
+            for s in np.asarray(r.payload):
+                vk, vv = compose_seq(
+                    cache, vk, vv, jnp.int32(int(s)),
+                    jnp.int32(int(s) // self.num_shards))
+            self.group[shard].stats.slots_remapped += len(r.versions)
+        self.views.publish(shard, (vk, vv))
 
     def _replay_update(self, cache: pc.PagedKVCache, requests,
                        shard: int = 0) -> None:
-        with self._view_lock:
-            for r in requests:
-                seq_ids, positions, new_k, new_v = r.payload
-                self.view_k, self.view_v = append_to_view(
-                    self.view_k, self.view_v, jnp.asarray(seq_ids),
-                    jnp.asarray(positions), new_k, new_v)
-                self.group[shard].stats.slots_remapped += len(r.versions)
+        vk, vv = self.views.snapshot(shard)
+        for r in requests:
+            seq_ids, positions, new_k, new_v = r.payload
+            rows = np.asarray(seq_ids) // self.num_shards
+            vk, vv = append_to_view(
+                vk, vv, jnp.asarray(rows),
+                jnp.asarray(positions), new_k, new_v)
+            self.group[shard].stats.slots_remapped += len(r.versions)
+        self.views.publish(shard, (vk, vv))
 
     def __enter__(self):
         return self

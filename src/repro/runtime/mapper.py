@@ -163,6 +163,12 @@ class ShortcutMapper:
         self.routed_shortcut = 0
         self.routed_fallback = 0
         self.lock = threading.Lock()
+        # serializes _process between the mapper thread and pump()
+        # callers: replay callables do unguarded read-modify-writes of
+        # their view slots (single-writer protocol), so two concurrent
+        # _process calls on the SAME mapper would silently lose the
+        # earlier publication.  Per-mapper only — shards never share it.
+        self._replay_mutex = threading.Lock()
         self._trad: dict = {}
         self._sc: dict = {}
         self._queue: "queue.SimpleQueue[Request]" = queue.SimpleQueue()
@@ -265,7 +271,8 @@ class ShortcutMapper:
             batch = self._drain()
             if not batch:
                 break
-            self._process(batch)
+            with self._replay_mutex:
+                self._process(batch)
             done += len(batch)
         return done
 
@@ -303,7 +310,8 @@ class ShortcutMapper:
         while not self._stop.is_set():
             batch = self._drain()
             if batch:
-                self._process(batch)
+                with self._replay_mutex:
+                    self._process(batch)
             else:
                 time.sleep(self.poll_interval)
 

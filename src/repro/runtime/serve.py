@@ -13,14 +13,24 @@ Two jit-able decode paths, mirroring the paper's two access paths:
 
 State layout is one NamedTuple so the launcher can derive shardings from
 logical names (``decode_state_names``) and jit with donated buffers.
+
+**Per-shard decode states** (:func:`shard_decode_state` /
+:func:`merge_decode_states`): sequence row ``b`` is owned by shard
+``b % num_shards`` — the same partition ``ShortcutKVManager`` uses for
+its per-shard view tensors (DESIGN.md §4.2) — so each shard's decode
+loop steps a state whose view arrays it alone owns.  N loops run
+lock-free side by side (no shared tensors, no view lock) and
+``merge_decode_states`` interleaves the rows back whenever a
+whole-batch state is needed.
 """
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any, Callable, NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models import model as M
@@ -96,6 +106,68 @@ def decode_state_init(cfg: ArchConfig, batch: int, s_cap: int,
     return jax.tree.map(
         lambda s: jnp.zeros(s.shape, s.dtype), struct,
         is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+# ---------------------------------------------------------------------------
+# Per-shard decode states (the serving twin of the per-shard KV views).
+# ---------------------------------------------------------------------------
+
+def _take_rows(x, sl, axis: int):
+    """Slice the batch axis of a state member ((), ctx_len axis 0,
+    tensors axis 1)."""
+    if isinstance(x, tuple):     # the () placeholder of unused members
+        return ()
+    ix = (slice(None),) * axis + (sl,)
+    return x[ix]
+
+
+def shard_decode_state(state: DecodeState,
+                       num_shards: int) -> "list[DecodeState]":
+    """Split a whole-batch decode state into ``num_shards`` states;
+    shard ``s`` owns sequence rows ``s, s + N, s + 2N, ...`` — exactly
+    ``ShortcutKVManager``'s ``seq_id % N`` partition, so a serving stack
+    can pair each shard's decode loop with its shard's view registry
+    slot.  Every member keeps the whole-batch layout minus the foreign
+    rows; the per-shard states drive the unchanged :func:`make_serve_step`.
+    """
+    if num_shards < 1:
+        raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+    return [DecodeState(
+        view_k=_take_rows(state.view_k, slice(s, None, num_shards), 1),
+        view_v=_take_rows(state.view_v, slice(s, None, num_shards), 1),
+        ssm_conv=_take_rows(state.ssm_conv, slice(s, None, num_shards), 1),
+        ssm_state=_take_rows(state.ssm_state, slice(s, None, num_shards), 1),
+        ctx_len=state.ctx_len[s::num_shards])
+        for s in range(num_shards)]
+
+
+def merge_decode_states(states: "Sequence[DecodeState]") -> DecodeState:
+    """Inverse of :func:`shard_decode_state`: interleave per-shard rows
+    back into one whole-batch state (row ``b`` from shard ``b % N``)."""
+    num_shards = len(states)
+    if num_shards == 1:
+        return states[0]
+    sizes = [int(st.ctx_len.shape[0]) for st in states]
+    total = sum(sizes)
+    # global row of each concatenated element, then its inverse gather
+    order = np.concatenate([np.arange(s, total, num_shards)
+                            for s in range(num_shards)])
+    inv = np.empty(total, np.int64)
+    inv[order] = np.arange(total)
+    inv = jnp.asarray(inv)
+
+    def merge(parts, axis):
+        if isinstance(parts[0], tuple):   # () placeholder
+            return ()
+        return jnp.take(jnp.concatenate(list(parts), axis=axis), inv,
+                        axis=axis)
+
+    return DecodeState(
+        view_k=merge([st.view_k for st in states], 1),
+        view_v=merge([st.view_v for st in states], 1),
+        ssm_conv=merge([st.ssm_conv for st in states], 1),
+        ssm_state=merge([st.ssm_state for st in states], 1),
+        ctx_len=merge([st.ctx_len for st in states], 0))
 
 
 # ---------------------------------------------------------------------------

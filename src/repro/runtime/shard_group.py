@@ -16,9 +16,14 @@ and (in async mode) threads, plus:
 
   * a **key → shard router** (client-supplied; Sharded-EH routes on the
     top bits of the directory hash, the KV manager on ``seq_id % N``);
+  * an optional :class:`ShardViewRegistry` — per-shard atomically-swapped
+    view tuples, so replay callables and ``view_arrays`` read the
+    registry instead of closing over whole-structure client attributes;
   * **aggregated** :class:`~repro.runtime.mapper.MaintenanceStats` and
     route counters across the group (per-shard stats remain available
-    through each member);
+    through each member); batch-level route decisions that span shards
+    land on a **group-level** counter instead of being misattributed to
+    one shard;
   * group-wide ``pump()`` / ``wait_in_sync()`` / ``close()`` and the
     sharded version gate :meth:`in_sync` / :meth:`gate`, keyed by
     ``{shard: view keys}`` so a read only waits on the shards it
@@ -28,18 +33,124 @@ The group deliberately does NOT share any state between members: one
 shard's create request can never collapse, gate, or serialize behind
 another shard's updates — that independence is the point, and
 ``tests/test_sharded_eh.py`` pins it.
+
+This module also owns the generic **cross-shard batching** helpers every
+sharded client shares (:func:`shard_order`, :func:`partition_by_shard`,
+:func:`pad_batch`): one stable argsort pass bucketizes a batch per
+shard, pads each shard's sub-batch to a static capacity drawn from a
+bounded size set (bounded set ⇒ bounded jit variants), and the returned
+permutation scatters per-shard results back to input order.  Sharded-EH
+uses them for its fused lookup; the KV manager for its cross-shard
+``get_context``.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import fields
-from typing import Callable, Dict, Hashable, Iterable, Optional, Sequence
+from typing import (Callable, Dict, Hashable, Iterable, List, Optional,
+                    Sequence)
+
+import numpy as np
 
 from repro.runtime.mapper import MaintenanceStats, ShortcutMapper
 
 #: ``{shard index: view keys}`` — the sharded analogue of the key lists
 #: the flat runtime takes; ``None`` values mean "all keys of that shard".
 KeysByShard = Dict[int, Optional[Iterable[Hashable]]]
+
+#: Static per-shard batch capacities (bounded set => bounded number of
+#: jit/pallas variants), mirroring ``shortcut_eh._CHUNK_SIZES``.
+_BATCH_SIZES = (64, 256, 1024, 4096, 16384, 65536, 262144)
+
+
+def pad_batch(n: int) -> int:
+    """Smallest static capacity from :data:`_BATCH_SIZES` holding ``n``
+    (multiples of the largest beyond it)."""
+    for c in _BATCH_SIZES:
+        if n <= c:
+            return c
+    return -(-n // _BATCH_SIZES[-1]) * _BATCH_SIZES[-1]
+
+
+def shard_order(sid: np.ndarray, num_shards: int):
+    """The one stable argsort pass every batched operation shares:
+    returns ``(order, counts, starts)`` — shard-sort permutation,
+    per-shard key counts, and each shard's offset in the sorted order."""
+    order = np.argsort(sid, kind="stable")
+    counts = np.bincount(sid, minlength=num_shards)
+    starts = np.zeros(num_shards, np.int64)
+    np.cumsum(counts[:-1], out=starts[1:])
+    return order, counts, starts
+
+
+def partition_by_shard(keys: np.ndarray, sid: np.ndarray, num_shards: int,
+                       cap: int, fill: int = 0, *, order=None, counts=None,
+                       starts=None):
+    """Bucketize ``keys`` per shard (via :func:`shard_order`, reused when
+    the caller already ran it to size ``cap``).
+
+    Returns ``(padded, counts, order, rank)``: ``padded`` is
+    (num_shards, cap) with shard s's keys in ``padded[s, :counts[s]]``
+    and ``fill`` elsewhere; ``order``/``rank`` invert the permutation —
+    input element ``order[i]`` sits at ``padded[sid[order][i],
+    rank[i]]``, so per-shard results scatter back to input order with
+    ``out[order] = results[sid[order], rank]``.
+    """
+    keys = np.asarray(keys)
+    if order is None or counts is None or starts is None:
+        order, counts, starts = shard_order(sid, num_shards)
+    sid_sorted = sid[order]
+    rank = np.arange(keys.size, dtype=np.int64) - starts[sid_sorted]
+    padded = np.full((num_shards, cap), fill, keys.dtype)
+    padded[sid_sorted, rank] = keys[order]
+    return padded, counts, order, rank
+
+
+class ShardViewRegistry:
+    """Per-shard, atomically-published shortcut view tuples.
+
+    Each slot holds ONE tuple of device arrays (or ``None`` before the
+    first publication).  :meth:`publish` is a single list-item store and
+    :meth:`snapshot` a single list-item load — both atomic under the
+    GIL — so a reader can never pair arrays from two different
+    publications of the same shard (the tear the KV manager's old
+    two-attribute ``view_k, view_v = ...`` publication allowed).
+
+    Writer discipline: one writer per slot — the shard's mapper thread
+    (or the ``pump()`` caller in sync mode), enforced by the mapper's
+    per-shard replay mutex (``ShortcutMapper._replay_mutex``).  That
+    single-writer rule + the atomic swap is exactly the
+    ``ShortcutEH._view`` protocol, lifted to N shards; no cross-shard
+    lock exists and none is needed.
+    """
+
+    def __init__(self, num_shards: int):
+        if num_shards < 1:
+            raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+        self._views: List[Optional[tuple]] = [None] * num_shards
+
+    def __len__(self) -> int:
+        return len(self._views)
+
+    def publish(self, shard: int, arrays: Iterable) -> None:
+        """Atomically swap shard ``shard``'s view tuple."""
+        self._views[shard] = tuple(arrays)
+
+    def snapshot(self, shard: int) -> Optional[tuple]:
+        """One consistent view tuple (or None) — read the slot ONCE and
+        index the result; never re-read per array."""
+        return self._views[shard]
+
+    def snapshot_all(self) -> list:
+        """Per-shard snapshots, each internally consistent (the list is
+        copied so concurrent publications don't mutate it underfoot)."""
+        return list(self._views)
+
+    def arrays(self, shard: int) -> tuple:
+        """Population target for the runtime's ``view_arrays`` hook:
+        the shard's current arrays, or () before first publication."""
+        v = self._views[shard]
+        return () if v is None else v
 
 
 class MapperGroup:
@@ -55,14 +166,29 @@ class MapperGroup:
         that bucketize batches themselves (Sharded-EH hashes whole numpy
         arrays at once) may never call it; :meth:`route` raises if it is
         needed but absent.
+    views:
+        optional :class:`ShardViewRegistry` the members' replay
+        callables publish into; exposing it here lets group consumers
+        (serving loops, benchmarks) snapshot per-shard views without
+        reaching into the client object.
     """
 
     def __init__(self, mappers: Sequence[ShortcutMapper], *,
-                 router: Optional[Callable[[Hashable], int]] = None):
+                 router: Optional[Callable[[Hashable], int]] = None,
+                 views: Optional[ShardViewRegistry] = None):
         if not mappers:
             raise ValueError("MapperGroup needs at least one mapper")
+        if views is not None and len(views) != len(mappers):
+            raise ValueError(
+                f"view registry has {len(views)} slots for "
+                f"{len(mappers)} mappers")
         self.mappers = list(mappers)
         self._router = router
+        self.views = views
+        # batch-level decisions spanning shards (shard=None in
+        # count_route) land here, not on an arbitrary member
+        self._routed_shortcut_group = 0
+        self._routed_fallback_group = 0
 
     # -- container protocol --------------------------------------------------
 
@@ -108,16 +234,28 @@ class MapperGroup:
 
     @property
     def routed_shortcut(self) -> int:
-        return sum(m.routed_shortcut for m in self.mappers)
+        return self._routed_shortcut_group + \
+            sum(m.routed_shortcut for m in self.mappers)
 
     @property
     def routed_fallback(self) -> int:
-        return sum(m.routed_fallback for m in self.mappers)
+        return self._routed_fallback_group + \
+            sum(m.routed_fallback for m in self.mappers)
 
-    def count_route(self, used_shortcut: bool, shard: int = 0) -> None:
-        """Count one routed batch, attributed to ``shard`` (batch-level
-        decisions are one event, not one per touched shard)."""
-        self.mappers[shard].count_route(used_shortcut)
+    def count_route(self, used_shortcut: bool,
+                    shard: Optional[int] = None) -> None:
+        """Count one routed batch: attributed to ``shard`` when the
+        decision belongs to a single shard, otherwise (``shard=None``)
+        to the group-level counter.  Batch-level decisions are one event
+        — never one per touched shard, and never silently credited to
+        shard 0 (that skewed per-shard stats for multi-shard batches)."""
+        if shard is None:
+            if used_shortcut:
+                self._routed_shortcut_group += 1
+            else:
+                self._routed_fallback_group += 1
+        else:
+            self.mappers[shard].count_route(used_shortcut)
 
     # -- sharded version gate ------------------------------------------------
 

@@ -109,6 +109,43 @@ class TestEHSpecs:
         assert specs["global_depths"].spec == P()
 
 
+class TestKVViewSpecs:
+    """Stacked per-shard KV view arrays place via the same
+    divisibility-aware rules (kv_shard ~ eh_shard)."""
+
+    def test_stacked_view_names(self, mesh):
+        # 16 shards over data; kv_heads over model; ctx/seqs replicate
+        # once their candidate axes are consumed
+        spec = logical_spec((16, 4, 64, 128, 16, 128),
+                            ("kv_shard", "layer", "kv_seqs", "ctx",
+                             "kv_heads", "head_dim"), mesh)
+        assert spec == P("data", None, None, None, "model")
+
+    def test_indivisible_shards_replicate(self, mesh):
+        # 2 shards cannot split a 16-way data axis -> the shard dim
+        # replicates and kv_seqs claims the freed data axis instead
+        spec = logical_spec((2, 4, 64, 128, 16, 128),
+                            ("kv_shard", "layer", "kv_seqs", "ctx",
+                             "kv_heads", "head_dim"), mesh)
+        assert spec == P(None, None, "data", None, "model")
+
+    def test_sharded_kv_view_specs_helper(self):
+        import numpy as np
+        from jax.sharding import Mesh
+        from repro.distributed.sharding import sharded_kv_view_specs
+        real = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                    ("data", "model"))
+
+        class Shaped:
+            def __init__(self, shape):
+                self.shape = shape
+        shape = (8, 2, 4, 32, 2, 8)
+        specs = sharded_kv_view_specs(
+            {"view_k": Shaped(shape), "view_v": Shaped(shape)}, real)
+        assert specs["view_k"].spec == P("data", None, None, None, "model")
+        assert specs["view_v"].spec == specs["view_k"].spec
+
+
 class TestParamNames:
     def test_names_cover_all_leaves(self):
         import jax.numpy as jnp

@@ -183,10 +183,13 @@ class TestMapperGroup:
         assert group.pump() == 6
         agg = group.stats
         assert agg.updates == sum(t.mapper.stats.updates for t in toys) >= 3
-        group.count_route(True)
-        group.count_route(False, shard=2)
+        group.count_route(True)                # batch-level: group counter
+        group.count_route(False, shard=2)      # shard-attributed
         assert group.routed_shortcut == 1 and group.routed_fallback == 1
-        assert group[0].routed_shortcut == 1 and group[2].routed_fallback == 1
+        assert group[2].routed_fallback == 1
+        # a batch-level decision must NOT skew any member's stats
+        # (the old default credited every multi-shard batch to shard 0)
+        assert all(m.routed_shortcut == 0 for m in group)
 
     def test_router_bounds_checked(self):
         group = MapperGroup([_Toy().mapper], router=lambda k: 5)

@@ -1,0 +1,257 @@
+"""Per-shard KV view arrays (kvcache/shortcut_cache, DESIGN.md §4.2):
+lock-free replays, atomic per-shard publication (no torn views), the
+under-lock position read, cross-shard get_context order, and randomized
+parity of ShortcutKVManager(num_shards=N) vs the single-shard manager
+with async mappers + a tear-detector thread.
+"""
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kvcache import paged_cache as pc
+from repro.kvcache.shortcut_cache import ShortcutKVManager
+
+L, BS, KV, HD = 2, 4, 2, 8
+MAX_SEQS, CAP = 8, 32
+
+
+def make_mgr(num_shards, **kw):
+    cache = pc.cache_create(L, MAX_SEQS * (CAP // BS) * 2, BS, KV, HD,
+                            MAX_SEQS, CAP // BS, dtype=jnp.float32)
+    return ShortcutKVManager(cache, seq_capacity=CAP,
+                             num_shards=num_shards, **kw)
+
+
+def paired_kv(rng, B, S):
+    """k random, v = -k: any reader pairing a view_k from one
+    publication with a view_v from another breaks v == -k somewhere
+    (zeros pair with zeros, so unwritten positions stay consistent)."""
+    k = jnp.asarray(rng.normal(size=(L, B, S, KV, HD)).astype(np.float32))
+    return k, -k
+
+
+class TestLockFreeReplay:
+    def test_view_lock_is_gone(self):
+        mgr = make_mgr(4)
+        assert not hasattr(mgr, "_view_lock")
+        mgr.close()
+
+    def test_replay_acquires_no_cross_shard_lock(self, rng):
+        """Replaying shard 0 while another thread holds shard 1's lock
+        must not block: the replay path touches only shard-own state."""
+        mgr = make_mgr(2)
+        k, v = paired_kv(rng, 2, 8)
+        mgr.prefill(np.array([0, 2]), k, v)          # both shard 0
+        done = threading.Event()
+
+        def pump_shard0():
+            mgr.group[0].pump()
+            done.set()
+
+        with mgr.group[1].lock:                      # foreign lock held
+            t = threading.Thread(target=pump_shard0)
+            t.start()
+            t.join(timeout=30.0)
+        assert done.is_set(), "shard-0 replay blocked on shard 1's lock"
+        assert mgr.in_sync(np.array([0, 2]))
+        mgr.close()
+
+    def test_atomic_tuple_publication(self, rng):
+        """One registry snapshot is one publication: k and v always come
+        from the same replay (v == -k by construction)."""
+        mgr = make_mgr(2)
+        k, v = paired_kv(rng, 2, 8)
+        mgr.prefill(np.array([0, 1]), k, v)
+        mgr.pump()
+        for s in range(2):
+            vk, vv = mgr.views.snapshot(s)
+            np.testing.assert_array_equal(np.asarray(vv), -np.asarray(vk))
+        mgr.close()
+
+
+class TestRacingAppenders:
+    def test_positions_read_under_lock(self, rng):
+        """Regression for the racy position read: two appenders racing on
+        the same sequence must see strictly increasing positions — the
+        pre-fix code read seq_lens before taking the shard locks, so both
+        could capture the same position and the view lost a token."""
+        mgr = make_mgr(1)
+        k, v = paired_kv(rng, 1, BS)
+        mgr.prefill(np.array([0]), k, v)
+        mgr.pump()
+
+        seen = []
+        orig = mgr.group[0].submit_update
+
+        def spy(keys, versions, payload=None):
+            seen.append(np.asarray(payload[1]).copy())
+            orig(keys, versions, payload=payload)
+
+        mgr.group[0].submit_update = spy
+        T = 8
+        barrier = threading.Barrier(2)
+        errors = []
+
+        def appender(seed):
+            r = np.random.default_rng(seed)
+            barrier.wait()
+            try:
+                for _ in range(T):
+                    nk, nv = paired_kv(r, 1, 1)
+                    mgr.append(np.array([0]), nk[:, :, 0], nv[:, :, 0])
+            except Exception as e:           # pragma: no cover
+                errors.append(e)
+
+        threads = [threading.Thread(target=appender, args=(s,))
+                   for s in (1, 2)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errors
+        positions = np.sort(np.concatenate(seen))
+        np.testing.assert_array_equal(positions, np.arange(BS, BS + 2 * T))
+        assert int(mgr.seq_lens(np.array([0]))[0]) == BS + 2 * T
+        mgr.pump()
+        kp, vp, _ = mgr.get_context(np.array([0]), route="paged")
+        ks, vs, _ = mgr.get_context(np.array([0]), route="shortcut")
+        sl = BS + 2 * T
+        np.testing.assert_array_equal(np.asarray(kp[:, :, :, :sl]),
+                                      np.asarray(ks[:, :, :, :sl]))
+        np.testing.assert_array_equal(np.asarray(vp[:, :, :, :sl]),
+                                      np.asarray(vs[:, :, :, :sl]))
+        mgr.close()
+
+
+class TestRouteAttribution:
+    def test_multi_shard_batch_hits_group_counter(self, rng):
+        """A batch-level route decision spanning shards lands on the
+        group-level counter — shard 0's per-shard stats must not move
+        (the old default misattributed every batch to shard 0)."""
+        mgr = make_mgr(2)
+        k, v = paired_kv(rng, 2, 8)
+        mgr.prefill(np.array([0, 1]), k, v)          # one seq per shard
+        mgr.pump()
+        mgr.get_context(np.array([0, 1]), route="shortcut")
+        mgr.get_context(np.array([0, 1]), route="paged")
+        assert mgr.routed_shortcut == 1 and mgr.routed_paged == 1
+        for s in range(2):
+            assert mgr.group[s].routed_shortcut == 0
+            assert mgr.group[s].routed_fallback == 0
+        mgr.close()
+
+
+class TestCrossShardContext:
+    def test_get_context_scatter_back_order(self, rng):
+        """A batch spanning shards in arbitrary order comes back in
+        input order, bit-identical to the paged path."""
+        mgr = make_mgr(2)
+        k, v = paired_kv(rng, 4, 8)
+        mgr.prefill(np.array([0, 1, 2, 3]), k, v)
+        mgr.pump()
+        ids = np.array([3, 0, 2, 1])                 # interleaved shards
+        ks, vs, _ = mgr.get_context(ids, route="shortcut")
+        kp, vp, _ = mgr.get_context(ids, route="paged")
+        np.testing.assert_array_equal(np.asarray(ks[:, :, :, :8]),
+                                      np.asarray(kp[:, :, :, :8]))
+        np.testing.assert_array_equal(np.asarray(vs[:, :, :, :8]),
+                                      np.asarray(vp[:, :, :, :8]))
+        mgr.close()
+
+
+class TestShardedParity:
+    """num_shards=N vs num_shards=1 over a randomized schedule with the
+    paper's async mapper threads on, plus a tear-detector thread
+    asserting every observed per-shard (view_k, view_v) pair is
+    version-consistent (v == -k holds only within one publication)."""
+
+    @pytest.mark.parametrize("num_shards", [2, 4])
+    def test_randomized_schedule_parity(self, rng, num_shards):
+        mgr1 = make_mgr(1, async_mapper=True, poll_interval=0.002)
+        mgrN = make_mgr(num_shards, async_mapper=True, poll_interval=0.002)
+
+        tears = []
+        stop = threading.Event()
+
+        def tear_detector():
+            while not stop.is_set():
+                for s in range(num_shards):
+                    vk, vv = mgrN.views.snapshot(s)
+                    a, b = np.asarray(vk), np.asarray(vv)
+                    if not np.array_equal(b, -a):
+                        tears.append(s)
+                        return
+
+        det = threading.Thread(target=tear_detector, daemon=True)
+        det.start()
+
+        active: dict = {}                 # seq -> current length
+        try:
+            for step in range(30):
+                op = rng.choice(["prefill", "append", "append",
+                                 "release", "compare"])
+                if op == "prefill":
+                    free = [s for s in range(MAX_SEQS) if s not in active]
+                    if not free:
+                        continue
+                    ids = rng.choice(free, size=min(2, len(free)),
+                                     replace=False).astype(np.int64)
+                    S = int(rng.choice([BS, 2 * BS, 3 * BS]))
+                    k, v = paired_kv(rng, ids.size, S)
+                    for m in (mgr1, mgrN):
+                        m.prefill(ids, k, v)
+                    for s in ids.tolist():
+                        active[s] = S
+                elif op == "append":
+                    ids = [s for s, ln in active.items() if ln < CAP - 1]
+                    if not ids:
+                        continue
+                    ids = np.asarray(sorted(rng.choice(
+                        ids, size=min(3, len(ids)), replace=False)))
+                    nk, nv = paired_kv(rng, ids.size, 1)
+                    for m in (mgr1, mgrN):
+                        m.append(ids, nk[:, :, 0], nv[:, :, 0])
+                    for s in ids.tolist():
+                        active[s] += 1
+                elif op == "release" and active and rng.random() < 0.5:
+                    s = int(rng.choice(sorted(active)))
+                    for m in (mgr1, mgrN):
+                        m.release(np.array([s]))
+                    del active[s]
+                elif op == "compare" and active:
+                    ids = np.asarray(sorted(active))
+                    rng.shuffle(ids)
+                    assert mgr1.wait_in_sync(ids, timeout=60.0)
+                    assert mgrN.wait_in_sync(ids, timeout=60.0)
+                    k1, v1, _ = mgr1.get_context(ids, route="shortcut")
+                    kN, vN, _ = mgrN.get_context(ids, route="shortcut")
+                    # acceptance: bit-identical across shard counts
+                    np.testing.assert_array_equal(np.asarray(k1),
+                                                  np.asarray(kN))
+                    np.testing.assert_array_equal(np.asarray(v1),
+                                                  np.asarray(vN))
+                    kp, vp, _ = mgrN.get_context(ids, route="paged")
+                    for i, s in enumerate(ids.tolist()):
+                        sl = active[s]
+                        np.testing.assert_array_equal(
+                            np.asarray(kN[:, i, :, :sl]),
+                            np.asarray(kp[:, i, :, :sl]))
+            # final settle + compare everything still active
+            if active:
+                ids = np.asarray(sorted(active))
+                assert mgr1.wait_in_sync(ids, timeout=60.0)
+                assert mgrN.wait_in_sync(ids, timeout=60.0)
+                k1, v1, _ = mgr1.get_context(ids, route="shortcut")
+                kN, vN, _ = mgrN.get_context(ids, route="shortcut")
+                np.testing.assert_array_equal(np.asarray(k1),
+                                              np.asarray(kN))
+                np.testing.assert_array_equal(np.asarray(v1),
+                                              np.asarray(vN))
+        finally:
+            stop.set()
+            det.join(timeout=10.0)
+            mgr1.close()
+            mgrN.close()
+        assert not tears, f"torn (view_k, view_v) pair on shards {tears}"
