@@ -1,31 +1,87 @@
-"""Sharded shortcut runtime: batched cross-shard lookup throughput vs N.
+"""Sharded shortcut runtime: batched cross-shard lookup throughput vs N,
+and the device-resident operand cache vs the per-call restack baseline.
 
 Builds a :class:`~repro.core.sharded_eh.ShardedShortcutEH` at N ∈
 {1, 2, 4, 8} shards over the same key set, then measures
 
   * ``batched_lookup_NX``  — the fused cross-shard path (one argsort
     bucketize + ONE ``pallas_call`` whose grid iterates shards +
-    scatter-back), end to end including the host partition pass;
+    scatter-back), end to end including the host partition pass; since
+    the operand cache landed this is the *cached* path (zero dirty
+    shards: no operand upload at all);
+  * ``restack_lookup_NX``  — the pre-cache baseline reconstructed: the
+    same kernel fed by a fresh ``jnp.stack`` of every shard's view on
+    every call (the O(total index size) copy the cache deletes);
+  * ``churn_lookup_NX_kK`` — the cache's worst case: K of N shards are
+    dirtied (one insert + pump each) between batches, so every lookup
+    pays K slice refreshes.  Reproduction target: degrades ≤ linearly
+    in K, and K=N stays within ~the restack baseline (a full refresh
+    re-uploads the same bytes the restack did);
   * ``routed_lookup_NX``   — the per-shard routed XLA path (each shard
     takes its own shortcut/traditional gate);
   * ``insert_NX``          — partitioned insert throughput (maintenance
     pumped outside the timed region, as in fig7's async accounting).
 
-Reproduction target: throughput stays flat-to-rising with N (per-shard
-structures shrink toward the VMEM-resident regime; on CPU/interpret the
-curve mostly shows that cross-shard batching costs ~nothing), while
-per-shard MaintenanceStats prove maintenance stayed shard-local.
+Reproduction target: ``batched`` ≥ ``restack`` everywhere, with the gap
+widening as N (and total stacked bytes) grows — the lookup hot path now
+pays O(changed shards) instead of O(index) per batch.
 """
 from __future__ import annotations
 
 import time
 
+import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import Row, sync, timeit, unique_keys
-from repro.core.sharded_eh import ShardedShortcutEH
+from repro.core.sharded_eh import ShardedShortcutEH, shard_of_keys
+from repro.runtime.shard_group import pad_batch, partition_by_shard
 
 SHARD_COUNTS = (1, 2, 4, 8)
+
+
+def restack_lookup(idx: ShardedShortcutEH, keys: np.ndarray, *,
+                   tile: int = 256):
+    """The pre-cache batched path: bucketize, then ``jnp.stack`` every
+    shard's composed view fresh and dispatch the shortcut kernel — the
+    per-batch O(index) operand upload the cache eliminates.  (Assumes
+    every shard is in sync with a composed view, which the bench
+    guarantees; shape-uniform views for simplicity.)"""
+    from repro.kernels.eh_lookup import sharded_shortcut_lookup
+    keys = np.asarray(keys, np.uint32)
+    sid = idx.shard_of(keys)
+    cap = pad_batch(int(np.bincount(sid, minlength=idx.num_shards).max()))
+    padded, counts, order, rank = partition_by_shard(
+        keys, sid, idx.num_shards, cap)
+    views = [s.view_snapshot() for s in idx.shards]
+    v_cap = max(v[0].shape[0] for v in views)
+    res = sharded_shortcut_lookup(
+        jnp.asarray(padded),
+        jnp.stack([jnp.pad(v[0], ((0, v_cap - v[0].shape[0]), (0, 0)))
+                   for v in views]),
+        jnp.stack([jnp.pad(v[1], ((0, v_cap - v[1].shape[0]), (0, 0)))
+                   for v in views]),
+        jnp.asarray([v[2] for v in views], jnp.int32), tile=tile)
+    res = np.asarray(res)
+    out = np.empty(keys.size, np.uint32)
+    out[order] = res[sid[order], rank]
+    return jnp.asarray(out)
+
+
+def _churn_keys(rng, idx: ShardedShortcutEH, k: int):
+    """One fresh key per target shard (the first k shards), to dirty
+    exactly k of N shards per churn step."""
+    out = []
+    want = set(range(k))
+    while want:
+        cand = unique_keys(rng, 512, lo=2**30, hi=2**32 - 2)
+        sid = shard_of_keys(cand, idx.shard_bits)
+        for s in list(want):
+            hit = cand[sid == s]
+            if hit.size:
+                out.append(int(hit[0]))
+                want.discard(s)
+    return out
 
 
 def run(scale: float = 1.0 / 100):
@@ -49,20 +105,56 @@ def run(scale: float = 1.0 / 100):
             idx.pump()
             t_maint = time.perf_counter() - t0
             assert idx.in_sync()
+            # pin the shortcut route: this sweep isolates operand
+            # upload cost (cached vs restacked), not the §3.2 routing
+            # law — at this scale fan-in crosses 8 around N=8 and would
+            # silently flip the cached path onto the traditional kernel
+            for s in idx.shards:
+                s.fan_in_threshold = float("inf")
 
+            # cached (zero dirty shards) vs per-call restack
             t_b = timeit(lambda: sync(idx.lookup_batched(probe)))
+            cache = idx.operands.stats.snapshot()
+            t_restack = timeit(lambda: sync(restack_lookup(idx, probe)))
             t_r = timeit(lambda: sync(idx.lookup(probe)))
             per_shard = [(s.creates + s.updates)
                          for s in idx.per_shard_stats()]
             rows.append(Row("sharded", f"batched_lookup_N{N}",
                             n / t_b / 1e6, "Mkeys/s",
-                            f"fan_in={idx.avg_fan_in():.2f}"))
+                            f"fan_in={idx.avg_fan_in():.2f}"
+                            f";cache_hits={cache.hits}"
+                            f";refreshes={cache.slice_refreshes}"
+                            f";rebuilds={cache.rebuilds}"))
+            rows.append(Row("sharded", f"restack_lookup_N{N}",
+                            n / t_restack / 1e6, "Mkeys/s",
+                            f"speedup={t_restack / t_b:.2f}x"))
             rows.append(Row("sharded", f"routed_lookup_N{N}",
                             n / t_r / 1e6, "Mkeys/s"))
             rows.append(Row("sharded", f"insert_N{N}",
                             n / t_insert / 1e6, "Minserts/s",
                             f"maintenance_async={t_maint:.3f}s"
                             f";replays_per_shard={per_shard}"))
+
+            # replay churn: dirty k of N shards between batches; the
+            # cached path pays k slice refreshes per lookup (its worst
+            # case at k=N), the restack baseline always pays N
+            for k in sorted({1, N}):
+                churn = _churn_keys(rng, idx, k)
+                cv = np.arange(len(churn), dtype=np.uint32)
+
+                def dirty_then_lookup(fn):
+                    idx.insert(np.asarray(churn, np.uint32), cv)
+                    idx.pump()
+                    return fn()
+
+                t_c = timeit(lambda: sync(dirty_then_lookup(
+                    lambda: idx.lookup_batched(probe))))
+                t_cr = timeit(lambda: sync(dirty_then_lookup(
+                    lambda: restack_lookup(idx, probe))))
+                rows.append(Row("sharded", f"churn_lookup_N{N}_k{k}",
+                                n / t_c / 1e6, "Mkeys/s",
+                                f"restack_equiv={n / t_cr / 1e6:.3g}"
+                                f";dirty={k}/{N}"))
     return rows
 
 

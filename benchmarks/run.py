@@ -1,18 +1,20 @@
 """Benchmark harness entry point: one function per paper table/figure.
 
 ``python -m benchmarks.run [--scale S] [--only table1,fig2,...]
-                           [--json PATH] [--compare PREV.json]``
+                           [--json PATH] [--compare PREV.json]
+                           [--strict]``
 
 Prints ``bench,name,value,unit,extra`` CSV rows; ``--json PATH``
 additionally writes the full Row list as structured JSON
 (``bench, name, value, unit, extra, wall``) — the machine-readable perf
 trajectory CI archives per commit.  ``--compare PREV.json`` diffs the
 run against a previous ``--json`` artifact and prints a WARNING for
-every row regressed by more than 2x (warn only — the exit code is
-unaffected until a few commits of history make failing safe; ROADMAP
-"perf trajectory").  The roofline table (§Roofline, from the multi-pod
-dry-run) is appended when dry-run records exist under
-results/dryrun_baseline.
+every row regressed by more than 2x; with ``--strict`` those warnings
+become a hard failure (exit code 3) — CI runs strict now that artifact
+history exists (ROADMAP perf-trajectory phase 2).  A missing/unreadable
+previous artifact never fails, strict or not (first run, expired
+artifact).  The roofline table (§Roofline, from the multi-pod dry-run)
+is appended when dry-run records exist under results/dryrun_baseline.
 """
 from __future__ import annotations
 
@@ -44,11 +46,12 @@ def _regression_ratio(row: Row, prev: dict) -> float:
 
 
 def compare_to_previous(rows: list, prev_path: str,
-                        factor: float = 2.0) -> int:
+                        factor: float = 2.0, strict: bool = False) -> int:
     """Print a WARNING per row regressed >``factor``x vs the previous
-    ``--json`` artifact; returns the number of warnings.  A missing or
+    ``--json`` artifact; returns the number of warnings (``main`` turns
+    a nonzero count into exit code 3 under ``--strict``).  A missing or
     unreadable artifact is a note, not an error (first run, expired
-    artifact)."""
+    artifact) — strict mode only fails on *measured* regressions."""
     try:
         with open(prev_path) as f:
             prev_rows = json.load(f)
@@ -72,7 +75,9 @@ def compare_to_previous(rows: list, prev_path: str,
                   f"({ratio:.2f}x worse)", file=sys.stderr)
     if warned:
         print(f"compare: {warned} row(s) regressed >{factor}x vs "
-              f"{prev_path} (warning only)", file=sys.stderr)
+              f"{prev_path} "
+              f"({'FAILING (--strict)' if strict else 'warning only'})",
+              file=sys.stderr)
     else:
         print(f"compare: no >{factor}x regressions vs {prev_path}",
               file=sys.stderr)
@@ -89,7 +94,10 @@ def main(argv=None) -> int:
                     help="also write all rows as structured JSON to PATH")
     ap.add_argument("--compare", default=None, metavar="PREV.json",
                     help="diff against a previous --json artifact and "
-                         "warn on >2x regressions (exit code unaffected)")
+                         "warn on >2x regressions")
+    ap.add_argument("--strict", action="store_true",
+                    help="with --compare: exit 3 when any row regressed "
+                         ">2x (a missing previous artifact still passes)")
     ap.add_argument("--skip-roofline", action="store_true")
     args = ap.parse_args(argv)
     wanted = [b for b in args.only.split(",") if b] or list(ALL)
@@ -120,8 +128,10 @@ def main(argv=None) -> int:
             f.write("\n")
         print(f"wrote {len(rows)} rows to {args.json}", file=sys.stderr)
 
+    regressions = 0
     if args.compare:
-        compare_to_previous(rows, args.compare)
+        regressions = compare_to_previous(rows, args.compare,
+                                          strict=args.strict)
 
     if not args.skip_roofline:
         import os
@@ -131,7 +141,11 @@ def main(argv=None) -> int:
                 print(f"\n== Roofline (from multi-pod dry-run: {d}) ==")
                 roofline.main(["--dir", d])
                 break
-    return 1 if failures else 0
+    if failures:
+        return 1
+    if args.strict and regressions:
+        return 3
+    return 0
 
 
 if __name__ == "__main__":

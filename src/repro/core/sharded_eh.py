@@ -26,7 +26,11 @@ What sharding buys (ISSUE/DESIGN.md §4):
     per-shard capacity (bounded size set => bounded jit variants), and
     resolved by ONE ``pallas_call`` whose grid iterates shards
     (``kernels/eh_lookup.sharded_eh_lookup``), then scattered back to
-    input order.
+    input order.  The stacked operands are **device-resident**
+    (``runtime/operand_cache``, DESIGN.md §4.3): refreshed per dirty
+    shard on publish epochs, not re-stacked per call; shards whose
+    gates disagree resolve in the same dispatch through the per-shard
+    routed kernel (``sharded_routed_lookup``).
 
 ``num_shards=1`` degenerates to the flat index: same hash, same routing
 law, same maintenance protocol, and ``lookup`` delegates straight to the
@@ -41,8 +45,6 @@ equivalent depth, not depth - shard_bits).
 """
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -51,6 +53,7 @@ from repro.core import extendible_hashing as eh
 from repro.core.hashing import HASH_C1
 from repro.core.shortcut_eh import ShortcutEH
 from repro.runtime.mapper import GLOBAL_VIEW, MaintenanceStats
+from repro.runtime.operand_cache import StackedOperandCache
 # The generic cross-shard batching helpers live with the sharded runtime
 # (shared with the KV manager's cross-shard get_context); re-exported
 # here because they are part of this module's historical public API.
@@ -69,6 +72,54 @@ def shard_of_keys(keys: np.ndarray, shard_bits: int) -> np.ndarray:
     h = (np.asarray(keys, np.uint64) * np.uint64(HASH_C1)) \
         & np.uint64(0xFFFFFFFF)
     return (h >> np.uint64(32 - shard_bits)).astype(np.int64)
+
+
+def _trad_parts(states):
+    """Operand-cache part builder for the traditional family: one
+    shard's ``(directory, bucket_keys, bucket_vals, global_depth)``
+    drawn from the consistent per-shard state snapshots.  Shapes are
+    static (the directory is allocated at ``max_global_depth``), so this
+    family never rebuilds after its first stack."""
+    def parts(s):
+        st = states[s]
+        return (st.directory, st.bucket_keys, st.bucket_vals,
+                st.global_depth)
+    return parts
+
+
+def _view_parts(views):
+    """Operand-cache part builder for the shortcut family: one shard's
+    ``(view_keys, view_vals, view_log2)``, zero-padded on the slot axis
+    to the current cross-shard maximum so the stack stays shape-uniform
+    (rows past ``2**view_log2`` are never indexed — the kernel slots by
+    the shard's own log2).  A shard whose view doubled past the common
+    capacity changes the part shape and triggers a full-family rebuild
+    (the only remaining O(index) path).  A shard with no composed view
+    yet contributes a zero placeholder at log2 0; its ``shortcut_ok``
+    flag keeps it on the traditional path, so the placeholder is only
+    ever probed by pad lanes."""
+    v_cap = max([1] + [v[0].shape[0] for v in views if v is not None])
+
+    def parts(s):
+        v = views[s]
+        if v is None:
+            z = jnp.zeros((v_cap,) + _slot_shape(views), jnp.uint32)
+            return (z, z, jnp.zeros((), jnp.int32))
+        vk, vv, vlog2 = v
+        if vk.shape[0] < v_cap:
+            grow = ((0, v_cap - vk.shape[0]), (0, 0))
+            vk = jnp.pad(vk, grow)
+            vv = jnp.pad(vv, grow)
+        return (vk, vv, jnp.asarray(vlog2, jnp.int32))
+    return parts
+
+
+def _slot_shape(views):
+    """(bucket_slots,) of the first composed view — placeholder width."""
+    for v in views:
+        if v is not None:
+            return v[0].shape[1:]
+    return (1,)
 
 
 class ShardedShortcutEH:
@@ -102,6 +153,10 @@ class ShardedShortcutEH:
             [s.mapper for s in self.shards],
             router=lambda key: int(shard_of_keys(
                 np.asarray([key], np.uint32), self.shard_bits)[0]))
+        # device-resident stacked lookup operands, refreshed per dirty
+        # shard (epoch-keyed; families "eh_trad" / "eh_view") — the
+        # batched path stopped re-stacking the whole index per call
+        self.operands = StackedOperandCache(num_shards)
 
     # -- routing -------------------------------------------------------------
 
@@ -137,11 +192,13 @@ class ShardedShortcutEH:
         Cross-shard batching: one argsort pass, static padded per-shard
         sub-batches (pad lanes are dropped on scatter-back)."""
         keys = np.asarray(keys, np.uint32)
+        if keys.size == 0:
+            return jnp.zeros((0,), jnp.uint32)
         if self.num_shards == 1:
             return self.shards[0].lookup(keys)
         sid = self.shard_of(keys)
         order, counts, starts = shard_order(sid, self.num_shards)
-        cap = pad_batch(int(counts.max()) if keys.size else 1)
+        cap = pad_batch(int(counts.max()))
         padded, counts, order, rank = partition_by_shard(
             keys, sid, self.num_shards, cap,
             order=order, counts=counts, starts=starts)
@@ -154,54 +211,69 @@ class ShardedShortcutEH:
         return jnp.asarray(out)
 
     def lookup_batched(self, keys, *, tile: int = 256) -> jax.Array:
-        """Fused cross-shard lookup: ONE Pallas dispatch for all shards.
+        """Fused cross-shard lookup: ONE Pallas dispatch for all shards,
+        fed from the device-resident operand cache.
 
-        Routes the whole batch through the shortcut kernel when every
-        shard's gate allows it *and* the composed views share a shape
-        (uniform load); otherwise the traditional fused kernel resolves
-        every shard (stacked directories — always shape-uniform).
-        Returns values in input order."""
+        Each shard routes independently (its own gate, its own view):
+        an all-shortcut batch takes the shortcut kernel, an all-
+        traditional batch the traditional kernel, and a *mixed* batch
+        the per-shard routed kernel — still one ``pallas_call``; a
+        gate-rejecting shard no longer demotes the others.  The stacked
+        operands come from :class:`StackedOperandCache` keyed by the
+        shards' publish epochs, so a batch against an unchanged index
+        uploads nothing and a replay-churned batch re-uploads only the
+        dirty shards' slices.  Returns values in input order."""
         from repro.kernels.eh_lookup import (sharded_eh_lookup,
+                                             sharded_routed_lookup,
                                              sharded_shortcut_lookup)
         keys = np.asarray(keys, np.uint32)
+        if keys.size == 0:
+            # no padding, no operand refresh, no dispatch, no route
+            # counters — an empty batch must not touch the device
+            return jnp.zeros((0,), jnp.uint32)
         sid = self.shard_of(keys)
         order, counts, starts = shard_order(sid, self.num_shards)
-        cap = pad_batch(int(counts.max()) if keys.size else 1)
+        cap = pad_batch(int(counts.max()))
         padded, counts, order, rank = partition_by_shard(
             keys, sid, self.num_shards, cap,
             order=order, counts=counts, starts=starts)
         # Gate every shard FIRST (each policy decides exactly once — no
-        # short-circuit), snapshot after: a replay landing in between
-        # publishes a strictly newer view, which the gates' verdict
-        # still covers; snapshotting first would let the gates certify
-        # stale tuples.  ONE snapshot per shard (view tuples swap
-        # atomically; EHStates are reassigned whole) so a concurrent
-        # async replay can neither tear a view nor make the uniformity
-        # check and the stack disagree about shapes.
+        # short-circuit), then read publish epochs, then snapshot: a
+        # replay landing after the gate publishes a strictly newer view,
+        # which the gates' verdict still covers — and it bumps its epoch
+        # before its sc_version, so the cache sees any gate-certified
+        # publication as dirty (never serves a slice older than what the
+        # gate certified).  ONE snapshot per shard (view tuples swap
+        # atomically; EHStates are reassigned whole), read AFTER the
+        # epochs so an epoch can only ever under-describe its snapshot.
         gates = [s.mapper.gate(s.avg_fan_in(), [GLOBAL_VIEW])
                  for s in self.shards]
+        view_epochs = [s.view_epoch for s in self.shards]
+        state_epochs = [s.state_epoch for s in self.shards]
         views = [s.view_snapshot() for s in self.shards]
         states = [s.state for s in self.shards]
-        use_shortcut = (
-            all(gates)
-            and all(v is not None for v in views)
-            and len({v[2] for v in views}) == 1)
-        self.group.count_route(use_shortcut)
+        shortcut_ok = [g and v is not None
+                       for g, v in zip(gates, views)]
+        involved = [int(s) for s in np.nonzero(counts)[0]]
+        for s in involved:
+            self.group.count_route(shortcut_ok[s], shard=s)
+        n_sc = sum(1 for s in involved if shortcut_ok[s])
         keys_dev = jnp.asarray(padded)
-        if use_shortcut:
-            res = sharded_shortcut_lookup(
-                keys_dev,
-                jnp.stack([v[0] for v in views]),
-                jnp.stack([v[1] for v in views]),
-                jnp.asarray([v[2] for v in views], jnp.int32), tile=tile)
+        if n_sc:
+            view_ops = self.operands.get(
+                "eh_view", view_epochs, _view_parts(views))
+        if n_sc < len(involved):
+            trad_ops = self.operands.get(
+                "eh_trad", state_epochs, _trad_parts(states))
+        if n_sc == len(involved):
+            res = sharded_shortcut_lookup(keys_dev, *view_ops, tile=tile)
+        elif n_sc == 0:
+            res = sharded_eh_lookup(keys_dev, *trad_ops, tile=tile)
         else:
-            res = sharded_eh_lookup(
-                keys_dev,
-                jnp.stack([st.directory for st in states]),
-                jnp.stack([st.bucket_keys for st in states]),
-                jnp.stack([st.bucket_vals for st in states]),
-                jnp.asarray([int(st.global_depth) for st in states],
-                            jnp.int32), tile=tile)
+            flags = jnp.asarray(
+                [0 if ok else 1 for ok in shortcut_ok], jnp.int32)
+            res = sharded_routed_lookup(keys_dev, *trad_ops, *view_ops,
+                                        flags, tile=tile)
         res = np.asarray(res)
         out = np.empty(keys.size, np.uint32)
         out[order] = res[sid[order], rank]

@@ -122,6 +122,23 @@ class ShortcutEH:
     def poll_interval(self) -> float:
         return self.mapper.poll_interval
 
+    # -- publish epochs (operand-cache keys; runtime/operand_cache.py) -------
+    #
+    # state_epoch moves with every ``self.state`` reassignment (insert
+    # stores the new state, then ``record()`` bumps under the same
+    # lock); view_epoch with every replay-batch publication of
+    # ``self._view`` (bumped by the runtime before sc_version, so a
+    # version gate can never certify a view the cache still sees as
+    # clean-but-old).  Read the epoch BEFORE snapshotting the arrays.
+
+    @property
+    def state_epoch(self) -> int:
+        return self.mapper.trad_epoch
+
+    @property
+    def view_epoch(self) -> int:
+        return self.mapper.view_epoch
+
     # -- view snapshot (atomic read; see _view comment in __init__) ----------
 
     def view_snapshot(self) -> Optional[tuple]:

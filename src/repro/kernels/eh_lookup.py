@@ -15,7 +15,15 @@ leading shard axis and the shard loop is a *grid dimension* of one
 ``pallas_call`` — N shards share a single kernel specialization instead
 of recompiling (or even re-dispatching) per shard.  The single-shard
 entry points are the N=1 degenerate case of the same kernel, so there is
-exactly one lookup-kernel body in the tree.
+exactly one lookup-kernel body in the tree (``_resolve_tile``).
+
+:func:`sharded_routed_lookup` is the **per-shard routed** form: it takes
+a per-shard ``two_level`` flag vector (scalar-prefetched alongside both
+depth vectors) and resolves each shard through the directory or the
+composed view *inside the same dispatch* — a mixed-sync shard group
+(some shards gated traditional, some shortcut-eligible) no longer
+demotes the whole batch.  The flag is uniform per grid cell, so each
+cell runs exactly one ``pl.when`` arm of the shared body.
 
 TPU adaptation notes (DESIGN.md §2): the VPU has no scatter/gather to HBM,
 so both kernels keep the directory and bucket pages VMEM-resident (block =
@@ -65,16 +73,12 @@ def _probe_row(row_k, row_v, key, slots: int):
     return jnp.where(found, row_v[pos[j]], jnp.uint32(MISS))
 
 
-def _lookup_kernel(gd_ref, keys_ref, dir_ref, bk_ref, bv_ref, out_ref, *,
-                   tile: int, slots: int, two_level: bool):
-    """One (shard, key-tile) grid cell.
+def _resolve_tile(keys, g, dir_ref, bk_ref, bv_ref, out_ref, *,
+                  tile: int, slots: int, two_level: bool):
+    """THE lookup body: resolve one key tile against one shard's pages.
 
-    Blocks carry a leading unit shard dim; the shard's global depth comes
-    from the scalar-prefetch vector, indexed by the shard grid position —
-    the only per-shard scalar, which is what lets every shard share this
-    one specialization."""
-    g = gd_ref[pl.program_id(0)]
-    keys = keys_ref[0]
+    Shared by the static kernels and both arms of the routed kernel, so
+    there is still exactly one probe loop in the tree."""
     slot = hashing.dir_slot(hashing.hash_dir(keys), g)
 
     def body(i, _):
@@ -90,6 +94,47 @@ def _lookup_kernel(gd_ref, keys_ref, dir_ref, bk_ref, bv_ref, out_ref, *,
         return 0
 
     jax.lax.fori_loop(0, tile, body, 0)
+
+
+def _lookup_kernel(gd_ref, keys_ref, dir_ref, bk_ref, bv_ref, out_ref, *,
+                   tile: int, slots: int, two_level: bool):
+    """One (shard, key-tile) grid cell, single-mode (``two_level`` is a
+    *static* python bool baked into the specialization).
+
+    Blocks carry a leading unit shard dim; the shard's global depth comes
+    from the scalar-prefetch vector, indexed by the shard grid position —
+    the only per-shard scalar, which is what lets every shard share this
+    one specialization."""
+    g = gd_ref[pl.program_id(0)]
+    _resolve_tile(keys_ref[0], g, dir_ref, bk_ref, bv_ref, out_ref,
+                  tile=tile, slots=slots, two_level=two_level)
+
+
+def _routed_kernel(sc_ref, keys_ref, dir_ref, bk_ref, bv_ref, vk_ref,
+                   vv_ref, out_ref, *, tile: int, slots: int):
+    """One (shard, key-tile) grid cell, per-shard routed.
+
+    ``sc_ref`` is the packed (3, N) scalar-prefetch block: row 0 the
+    per-shard ``two_level`` flags (1 → resolve traditionally through the
+    directory, 0 → through the composed view), row 1 the traditional
+    global depths, row 2 the view log2 sizes.  The flag is uniform
+    across a grid cell (it is per *shard*), so each cell runs exactly
+    one ``pl.when`` arm — a mixed-sync shard group still fuses into ONE
+    dispatch instead of demoting the whole batch to the traditional
+    kernel."""
+    s = pl.program_id(0)
+    two_level = sc_ref[0, s]
+    keys = keys_ref[0]
+
+    @pl.when(two_level != 0)
+    def _traditional():
+        _resolve_tile(keys, sc_ref[1, s], dir_ref, bk_ref, bv_ref,
+                      out_ref, tile=tile, slots=slots, two_level=True)
+
+    @pl.when(two_level == 0)
+    def _shortcut():
+        _resolve_tile(keys, sc_ref[2, s], dir_ref, vk_ref, vv_ref,
+                      out_ref, tile=tile, slots=slots, two_level=False)
 
 
 def _run(keys, directory, bucket_keys, bucket_vals, global_depths, *,
@@ -181,3 +226,59 @@ def sharded_shortcut_lookup(keys, view_keys, view_vals, global_depths, *,
     dummy_dir = jnp.zeros((keys.shape[0], 1), jnp.int32)
     return _run(keys, dummy_dir, view_keys, view_vals, global_depths,
                 two_level=False, tile=tile, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def sharded_routed_lookup(keys, directories, bucket_keys, bucket_vals,
+                          global_depths, view_keys, view_vals, view_log2s,
+                          two_level, *, tile: int = 256,
+                          interpret: Optional[bool] = None):
+    """Per-shard routed lookup across N stacked shards: ONE dispatch
+    even when the shards disagree about their access path.
+
+    ``two_level`` is the per-shard flag vector (N,): nonzero shards
+    resolve traditionally (directories (N, D) + bucket pools (N, C, S)
+    at ``global_depths``), zero shards resolve through their composed
+    views ((N, V, S), slot-indexed at ``view_log2s``; rows past
+    ``2**view_log2s[s]`` are pad and never indexed).  Both operand sets
+    ride in VMEM per grid cell — the price of not demoting a mixed
+    batch is one extra resident block pair, which the operand cache
+    (``runtime/operand_cache``) keeps warm anyway.  Returns (N, K)
+    uint32 in the same padded layout as :func:`sharded_eh_lookup`.
+    """
+    N, n = keys.shape
+    if bucket_keys.shape[-1] != view_keys.shape[-1]:
+        raise ValueError(
+            f"bucket/view slot widths differ: {bucket_keys.shape[-1]} "
+            f"vs {view_keys.shape[-1]}")
+    pad = (-n) % tile
+    if pad:
+        keys = jnp.pad(keys, ((0, 0), (0, pad)))
+    nt = (n + pad) // tile
+    D = directories.shape[1]
+    C, S = bucket_keys.shape[1:]
+    V = view_keys.shape[1]
+    scalars = jnp.stack([two_level.astype(jnp.int32),
+                         global_depths.astype(jnp.int32),
+                         view_log2s.astype(jnp.int32)])        # (3, N)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,          # the packed (3, N) block in SMEM
+        grid=(N, nt),
+        in_specs=[
+            pl.BlockSpec((1, tile), lambda s, i, sc: (s, i)),
+            pl.BlockSpec((1, D), lambda s, i, sc: (s, 0)),
+            pl.BlockSpec((1, C, S), lambda s, i, sc: (s, 0, 0)),
+            pl.BlockSpec((1, C, S), lambda s, i, sc: (s, 0, 0)),
+            pl.BlockSpec((1, V, S), lambda s, i, sc: (s, 0, 0)),
+            pl.BlockSpec((1, V, S), lambda s, i, sc: (s, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tile), lambda s, i, sc: (s, i)),
+    )
+    kernel = functools.partial(_routed_kernel, tile=tile, slots=S)
+    out = pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((N, n + pad), jnp.uint32),
+        interpret=resolve_interpret(interpret),
+    )(scalars, keys.astype(jnp.uint32), directories.astype(jnp.int32),
+      bucket_keys, bucket_vals, view_keys, view_vals)
+    return out[:, :n]

@@ -29,8 +29,12 @@ ONE atomic tuple swap of its registry slot — the replay path acquires no
 cross-shard lock (there is no view lock at all), and a reader snapshots a
 slot once so it can never pair a ``view_k`` from one publication with the
 ``view_v`` of another.  Cross-shard reads (``get_context`` over a batch
-spanning shards) bucketize ``seq_id``s per shard with the same
-argsort/pad/scatter-back pass as ``sharded_eh.lookup_batched``.
+spanning shards) gather from a device-resident stacked
+``(N, L, rows, S_cap, KV, hd)`` pair held by a
+:class:`~repro.runtime.operand_cache.StackedOperandCache` and refreshed
+only for shards that published since the previous batch (epoch-keyed,
+DESIGN.md §4.3) — one fused two-axis gather in input order replaces the
+old per-call argsort/pad/per-shard-gather/scatter-back pass.
 """
 from __future__ import annotations
 
@@ -43,8 +47,8 @@ import numpy as np
 
 from repro.kvcache import paged_cache as pc
 from repro.runtime.mapper import FragmentationRouting, ShortcutMapper
-from repro.runtime.shard_group import (MapperGroup, ShardViewRegistry,
-                                       partition_by_shard, shard_order)
+from repro.runtime.operand_cache import StackedOperandCache
+from repro.runtime.shard_group import MapperGroup, ShardViewRegistry
 
 
 # -- functional core -----------------------------------------------------------
@@ -129,6 +133,11 @@ class ShortcutKVManager:
         zv = jnp.zeros_like(zk)
         for s in range(num_shards):
             self.views.publish(s, (zk, zv))
+        # device-resident stacked (N, L, rows, S_cap, KV, hd) view pair
+        # for cross-shard reads, refreshed per dirty shard (keyed by the
+        # registry's publish epochs) — get_context stopped re-stacking
+        # per-shard gathers on every batch
+        self.operands = StackedOperandCache(num_shards)
         self.group = MapperGroup(
             [ShortcutMapper(
                 replay_create=lambda snap, reqs, shard=i:
@@ -266,11 +275,19 @@ class ShortcutKVManager:
 
         The shortcut path reads per-shard view tensors: a batch confined
         to one shard is a single row-gather on that shard's arrays; a
-        batch spanning shards is bucketized per shard (one stable
-        argsort, static padded sub-batches) and scattered back to input
-        order — the ``sharded_eh.lookup_batched`` pattern at the KV
-        layer."""
+        batch spanning shards gathers from the device-resident stacked
+        pair held by the operand cache (one fused two-axis gather in
+        input order — no argsort, no per-call stacking; the cache
+        refreshes only slices whose shard published since the last
+        batch)."""
         seq_ids = np.asarray(seq_ids)
+        if seq_ids.size == 0:
+            # empty batch: no fragmentation statistic, no gather, no
+            # route counters — nothing may touch the device
+            vk, _ = self.views.snapshot(0)
+            L, _, S, KV, hd = vk.shape
+            empty = jnp.zeros((L, 0, KV, S, hd), vk.dtype)
+            return empty, empty, route or "paged"
         route = route or self.route(seq_ids)
         # batch-level decision -> group-level counter (a multi-shard
         # batch must not skew shard 0's per-shard stats)
@@ -283,43 +300,35 @@ class ShortcutKVManager:
 
     def _shortcut_context(self, seq_ids: np.ndarray):
         """Cross-shard view read in input order (no locks: one registry
-        snapshot per shard is consistent by construction)."""
+        snapshot per shard is consistent by construction).
+
+        A single-shard batch gathers straight off that shard's tuple; a
+        multi-shard batch reads the cached device-resident stacked pair
+        ``(N, L, rows, S_cap, KV, hd)`` with one fused two-axis gather
+        ``stack[sid, :, row]`` — input order falls out of the index
+        arrays, so the old argsort/pad/per-shard-gather/scatter-back
+        pass (and its per-call ``jnp.stack`` of gathered slabs) is gone.
+        Epochs are read BEFORE the snapshots (operand-cache protocol):
+        a publish racing in between can only make the cache refresh
+        redundantly, never serve a slice older than the route gate
+        certified."""
         sid = seq_ids % self.num_shards
         rows = seq_ids // self.num_shards
-        views = self.views.snapshot_all()
         involved = np.unique(sid)
         if involved.size <= 1:
             shard = int(involved[0]) if involved.size else 0
-            k, v = views[shard]
+            k, v = self.views.snapshot(shard)
             return slice_context(k, v, jnp.asarray(rows))
-        order, counts, starts = shard_order(sid, self.num_shards)
-        # pad per-shard row counts to the next power of two — each index
-        # row gathers a full (L, S_cap, KV, hd) context slab, so the EH
-        # key ladder's 64-entry floor would be megabytes of waste; jit
-        # variants stay bounded by log2(seqs_per_shard)
-        cap = 1 << max(0, int(counts.max()) - 1).bit_length()
-        padded, counts, order, rank = partition_by_shard(
-            rows, sid, self.num_shards, cap,
-            order=order, counts=counts, starts=starts)
-        parts_k, parts_v = [], []
-        part_of = np.full(self.num_shards, -1)
-        for s in range(self.num_shards):
-            if counts[s]:
-                part_of[s] = len(parts_k)
-                k, v = views[s]
-                ks, vs = slice_context(k, v, jnp.asarray(padded[s]))
-                parts_k.append(ks)
-                parts_v.append(vs)
-        stack_k = jnp.stack(parts_k)        # (M, L, cap, KV, S, hd)
-        stack_v = jnp.stack(parts_v)
-        # scatter back: input element j lives at (part_of[sid[j]],
-        # rank_orig[j]) in the stacks (rank in sorted order -> original)
-        rank_orig = np.empty(seq_ids.size, np.int64)
-        rank_orig[order] = rank
-        pi = jnp.asarray(part_of[sid])
-        ri = jnp.asarray(rank_orig)
-        return (jnp.moveaxis(stack_k[pi, :, ri], 0, 1),
-                jnp.moveaxis(stack_v[pi, :, ri], 0, 1))
+        epochs = self.views.epochs()
+        views = self.views.snapshot_all()
+        stack_k, stack_v = self.operands.get(
+            "kv_view", epochs, lambda s: views[s])
+        si = jnp.asarray(sid)
+        ri = jnp.asarray(rows)
+        k = stack_k[si, :, ri]              # (B, L, S_cap, KV, hd)
+        v = stack_v[si, :, ri]
+        return (jnp.transpose(k, (1, 0, 3, 2, 4)),
+                jnp.transpose(v, (1, 0, 3, 2, 4)))
 
     def seq_lens(self, seq_ids: np.ndarray) -> np.ndarray:
         return np.asarray(self.cache.seq_lens)[seq_ids]

@@ -169,6 +169,15 @@ class ShortcutMapper:
         # _process calls on the SAME mapper would silently lose the
         # earlier publication.  Per-mapper only — shards never share it.
         self._replay_mutex = threading.Lock()
+        # publish epochs for the device-resident operand cache
+        # (runtime/operand_cache.py): trad_epoch moves with every
+        # authoritative mutation (record/invalidate), view_epoch with
+        # every replay-batch publication.  Writer order is always
+        # "store arrays, then bump" — and view_epoch bumps BEFORE
+        # sc_version publication, so any view a version gate certifies
+        # is already visible as a dirty epoch to cache readers.
+        self.trad_epoch = 0
+        self.view_epoch = 0
         self._trad: dict = {}
         self._sc: dict = {}
         self._queue: "queue.SimpleQueue[Request]" = queue.SimpleQueue()
@@ -190,6 +199,10 @@ class ShortcutMapper:
             v = self._trad.get(k, 0) + 1
             self._trad[k] = v
             out.append(v)
+        # after the client stored its mutated state (callers reassign
+        # state first, then record under the same lock): cache readers
+        # that see the new epoch are guaranteed to snapshot the new state
+        self.trad_epoch += 1
         return out
 
     def invalidate(self, keys: Sequence[Hashable]) -> None:
@@ -199,6 +212,7 @@ class ShortcutMapper:
         for k in keys:
             self._trad[k] = self._trad.get(k, 0) + 1
             self._sc[k] = -1
+        self.trad_epoch += 1
 
     def trad_version(self, key: Hashable = GLOBAL_VIEW) -> int:
         return self._trad.get(key, 0)
@@ -362,6 +376,12 @@ class ShortcutMapper:
         t2 = time.perf_counter()
         self.stats.replay_seconds += t1 - t0
         self.stats.populate_seconds += t2 - t1
+
+        # bump BEFORE publishing sc versions: once a gate certifies
+        # these versions, operand-cache readers must already see the
+        # epoch move (else a cached slice older than the certified view
+        # would read as clean and be served)
+        self.view_epoch += 1
 
         for r in batch:
             for k, v in r.versions.items():

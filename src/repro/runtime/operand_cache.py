@@ -1,0 +1,225 @@
+"""Device-resident stacked-operand cache with epoch-based slice refresh.
+
+The batched cross-shard kernels (``kernels/eh_lookup.sharded_*``, the KV
+manager's cross-shard ``get_context``) consume the per-shard structures
+stacked on a leading shard axis: ``(N, ...)`` directories, bucket pools,
+composed views.  Re-materializing those stacks per batch — the original
+``jnp.stack([...])`` in every lookup — is an O(total index size) copy
+that dwarfs the probe it feeds, and it is exactly the cost the paper's
+§4 rewiring exists to eliminate: pay the mapping once at *publish* time,
+not on every lookup.  (Paged-attention serving stacks make the same
+move: the block tables stay device-resident and only dirty slices are
+patched per step.)
+
+:class:`StackedOperandCache` keeps one stacked tuple per *operand
+family* ("eh_trad", "eh_view", "kv_view", ...) resident on device, keyed
+by per-shard **publish epochs**:
+
+  * every authoritative mutation / view publication bumps its shard's
+    epoch *after* storing the new arrays (writer order; the hooks live
+    in ``runtime/mapper.ShortcutMapper`` and
+    ``runtime/shard_group.ShardViewRegistry``);
+  * a reader passes the epochs it read *before* snapshotting the
+    per-shard arrays; the cache refreshes only the shards whose epoch
+    moved, with one ``jax.lax.dynamic_update_slice`` per dirty shard —
+    O(changed shards), not O(index);
+  * a dirty shard whose part changed **shape** (e.g. a composed view
+    after a directory doubling grew past the common pad capacity)
+    triggers a full rebuild of that family — the only O(index) path
+    left, and it is amortized over every doubling interval.
+
+The reader/writer epoch protocol tolerates races in exactly one
+direction: a publication landing between the reader's epoch read and its
+array snapshot hands the cache *newer* arrays under an *older* recorded
+epoch, so the next ``get`` refreshes redundantly — never serves stale.
+The hooks bump epochs **before** publishing ``sc_version`` (see
+``ShortcutMapper._process``), so any view a version gate certifies is
+already visible as a dirty epoch: a cached slice older than the epoch
+the gate certified cannot be served.
+
+Donation/aliasing rules (DESIGN.md §4.3): with ``donate=True`` the
+refresh donates the previous stacked buffer to the update-slice call on
+accelerator backends, so XLA patches it in place instead of allocating
+a sibling copy.  Donation deletes the old buffer, which makes every
+returned stack a **loan** whose lifetime ends at the next refresh — a
+reader that obtained a stack and races another thread's refresh before
+dispatching observes a deleted buffer.  That is only safe when a single
+thread drives lookups (the common serving-loop shape), so donation is
+**opt-in**: the default never donates and is safe for concurrent
+readers (each refresh allocates a sibling; old loans stay valid until
+released).  CPU donation would be a warn-and-copy no-op either way, so
+the interpret-mode tests cannot exercise the donating path — another
+reason it must not be the silent default.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["StackedOperandCache", "OperandCacheStats"]
+
+
+def _backend_can_donate() -> bool:
+    """XLA implements input/output aliasing on accelerators only; CPU
+    donation is a warn-and-copy no-op."""
+    return jax.default_backend() in ("tpu", "gpu")
+
+
+@jax.jit
+def _refresh_slice(stacked: jax.Array, part: jax.Array,
+                   shard: jax.Array) -> jax.Array:
+    """stacked[shard] = part, via dynamic_update_slice (shard is traced,
+    so N shards share one compiled variant per shape/dtype)."""
+    start = (shard.astype(jnp.int32),) + (jnp.int32(0),) * part.ndim
+    return jax.lax.dynamic_update_slice(stacked, part[None], start)
+
+
+# donating twin: same computation, previous stack buffer reused in place
+_refresh_slice_donated = jax.jit(
+    lambda stacked, part, shard: _refresh_slice.__wrapped__(
+        stacked, part, shard),
+    donate_argnums=(0,))
+
+
+@dataclass
+class OperandCacheStats:
+    hits: int = 0               # get() served fully from cache (0 dirty)
+    slice_refreshes: int = 0    # dirty shards patched in place
+    rebuilds: int = 0           # full restacks (first build / shape change)
+
+    def snapshot(self) -> "OperandCacheStats":
+        return OperandCacheStats(self.hits, self.slice_refreshes,
+                                 self.rebuilds)
+
+
+@dataclass
+class _Entry:
+    epochs: List[int]                       # per-shard epoch of each slice
+    arrays: Tuple[jax.Array, ...]           # the stacked (N, ...) tensors
+    part_shapes: Tuple[tuple, ...]          # per-shard part shapes/dtypes
+    part_dtypes: Tuple = field(default_factory=tuple)
+
+
+class StackedOperandCache:
+    """Per-family cache of stacked ``(N, ...)`` lookup operands.
+
+    ``get(family, epochs, parts)`` is the single entry point: ``epochs``
+    are the per-shard publish epochs the caller read *before* taking its
+    array snapshots, and ``parts`` is a callable ``shard -> tuple of
+    device arrays`` invoked **only** for dirty shards (or all shards on
+    a rebuild) — so a clean get never touches per-shard arrays at all.
+    Part tuples must be shape/dtype-uniform across shards within one
+    call; a caller whose parts grew (view doubling) simply returns the
+    new shape and the family rebuilds.
+
+    Thread safety: one lock per cache serializes refreshes; concurrent
+    readers either wait for the patch or hit the already-updated entry.
+    Writers (mappers) never call in here — they only bump epochs.
+
+    ``donate=True`` opts into in-place refreshes on accelerator
+    backends (see the module docstring's aliasing rules): only for
+    single-reader drivers — a donating refresh deletes the buffers a
+    concurrent reader may still be about to dispatch with.
+    """
+
+    def __init__(self, num_shards: int, *, donate: bool = False):
+        if num_shards < 1:
+            raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+        self.num_shards = num_shards
+        self.donate = bool(donate)
+        self.stats = OperandCacheStats()
+        self._entries: Dict[str, _Entry] = {}
+        self._lock = threading.Lock()
+
+    # -- the hot path --------------------------------------------------------
+
+    def get(self, family: str, epochs: Sequence[int],
+            parts: Callable[[int], Tuple[jax.Array, ...]]
+            ) -> Tuple[jax.Array, ...]:
+        """Stacked operand tuple for ``family``, current to ``epochs``."""
+        epochs = [int(e) for e in epochs]
+        if len(epochs) != self.num_shards:
+            raise ValueError(f"{len(epochs)} epochs for "
+                             f"{self.num_shards} shards")
+        with self._lock:
+            ent = self._entries.get(family)
+            if ent is None:
+                return self._rebuild(family, epochs, parts)
+            dirty = [s for s in range(self.num_shards)
+                     if epochs[s] != ent.epochs[s]]
+            if not dirty:
+                self.stats.hits += 1
+                return ent.arrays
+            arrays = list(ent.arrays)
+            new_epochs = list(ent.epochs)
+            refresh = (_refresh_slice_donated
+                       if self.donate and _backend_can_donate()
+                       else _refresh_slice)
+            try:
+                for s in dirty:
+                    p = tuple(parts(s))
+                    if (tuple(a.shape for a in p) != ent.part_shapes
+                            or tuple(a.dtype for a in p)
+                            != ent.part_dtypes):
+                        # shape changed (e.g. view doubling): restack
+                        return self._rebuild(family, epochs, parts,
+                                             prebuilt={s: p})
+                    sidx = jnp.int32(s)
+                    for j, a in enumerate(p):
+                        arrays[j] = refresh(arrays[j], a, sidx)
+                    new_epochs[s] = epochs[s]
+                    self.stats.slice_refreshes += 1
+            except BaseException:
+                if refresh is _refresh_slice_donated:
+                    # the old buffers may already be donated away; drop
+                    # the entry so the next get rebuilds from scratch
+                    self._entries.pop(family, None)
+                raise
+            # commit epochs and arrays together, only once every dirty
+            # slice refreshed — a parts() exception mid-loop must not
+            # leave the entry claiming freshness over the old arrays
+            ent.arrays = tuple(arrays)
+            ent.epochs = new_epochs
+            return ent.arrays
+
+    def _rebuild(self, family: str, epochs: List[int],
+                 parts: Callable[[int], Tuple[jax.Array, ...]],
+                 prebuilt: Optional[dict] = None) -> Tuple[jax.Array, ...]:
+        prebuilt = prebuilt or {}
+        per_shard = [tuple(prebuilt.get(s) or parts(s))
+                     for s in range(self.num_shards)]
+        width = {len(p) for p in per_shard}
+        if len(width) != 1:
+            raise ValueError(f"family {family!r}: ragged part tuples "
+                             f"{sorted(width)}")
+        stacked = tuple(jnp.stack([p[j] for p in per_shard])
+                        for j in range(width.pop()))
+        self._entries[family] = _Entry(
+            epochs=list(epochs), arrays=stacked,
+            part_shapes=tuple(a.shape for a in per_shard[0]),
+            part_dtypes=tuple(a.dtype for a in per_shard[0]))
+        self.stats.rebuilds += 1
+        return stacked
+
+    # -- bookkeeping ---------------------------------------------------------
+
+    def epochs(self, family: str) -> Optional[List[int]]:
+        """The per-shard epochs the cached slices were built at (test /
+        introspection hook); None before the family's first build."""
+        ent = self._entries.get(family)
+        return None if ent is None else list(ent.epochs)
+
+    def invalidate(self, family: Optional[str] = None) -> None:
+        """Drop one family (or all) — next get() rebuilds."""
+        with self._lock:
+            if family is None:
+                self._entries.clear()
+            else:
+                self._entries.pop(family, None)
+
+    def __contains__(self, family: str) -> bool:
+        return family in self._entries

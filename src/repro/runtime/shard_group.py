@@ -128,13 +128,29 @@ class ShardViewRegistry:
         if num_shards < 1:
             raise ValueError(f"num_shards must be >= 1, got {num_shards}")
         self._views: List[Optional[tuple]] = [None] * num_shards
+        # publish epochs for the device-resident operand cache
+        # (runtime/operand_cache.py): bumped AFTER the tuple store, so a
+        # reader that reads the epoch first and snapshots second can at
+        # worst record a newer tuple under an older epoch — a redundant
+        # refresh next get(), never a stale serve
+        self._epochs: List[int] = [0] * num_shards
 
     def __len__(self) -> int:
         return len(self._views)
 
     def publish(self, shard: int, arrays: Iterable) -> None:
-        """Atomically swap shard ``shard``'s view tuple."""
+        """Atomically swap shard ``shard``'s view tuple (and bump its
+        publish epoch, second — writer order matters, see _epochs)."""
         self._views[shard] = tuple(arrays)
+        self._epochs[shard] += 1
+
+    def epoch(self, shard: int) -> int:
+        """Shard's publish epoch; read BEFORE :meth:`snapshot`."""
+        return self._epochs[shard]
+
+    def epochs(self) -> List[int]:
+        """All shards' publish epochs (copied; read before snapshots)."""
+        return list(self._epochs)
 
     def snapshot(self, shard: int) -> Optional[tuple]:
         """One consistent view tuple (or None) — read the slot ONCE and

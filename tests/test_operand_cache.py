@@ -1,0 +1,429 @@
+"""Device-resident operand cache (runtime/operand_cache) and per-shard
+routed fused lookup: epoch/refresh/rebuild semantics, routed-kernel
+parity for ``two_level`` vectors in {all-true, all-false, mixed}, the
+empty-batch short-circuits, and cache coherence under concurrent async
+replays (no torn stacks; a slice older than the epoch the gate certified
+is never served)."""
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import extendible_hashing as eh
+from repro.core.sharded_eh import ShardedShortcutEH
+from repro.kernels import eh_lookup as kmod
+from repro.runtime.operand_cache import StackedOperandCache
+
+from conftest import unique_keys
+
+
+# ---------------------------------------------------------------------------
+# Unit semantics of the cache itself.
+# ---------------------------------------------------------------------------
+
+class TestCacheUnit:
+    def _parts(self, data, calls=None):
+        def parts(s):
+            if calls is not None:
+                calls.append(s)
+            return tuple(jnp.asarray(a) for a in data[s])
+        return parts
+
+    def test_build_hit_and_dirty_refresh(self):
+        cache = StackedOperandCache(3)
+        data = [(np.full((4,), s, np.int32), np.full((2, 2), s, np.float32))
+                for s in range(3)]
+        calls = []
+        out = cache.get("fam", [0, 0, 0], self._parts(data, calls))
+        assert sorted(calls) == [0, 1, 2]           # first build touches all
+        assert cache.stats.rebuilds == 1
+        np.testing.assert_array_equal(np.asarray(out[0])[1], 1)
+        # clean get: parts never invoked, same arrays served
+        calls.clear()
+        out2 = cache.get("fam", [0, 0, 0], self._parts(data, calls))
+        assert calls == [] and cache.stats.hits == 1
+        assert all(a is b for a, b in zip(out, out2))
+        # dirty shard 1: only its part is read, only its slice changes
+        data[1] = (np.full((4,), 7, np.int32), np.full((2, 2), 7, np.float32))
+        out3 = cache.get("fam", [0, 5, 0], self._parts(data, calls))
+        assert calls == [1]
+        assert cache.stats.slice_refreshes == 1
+        np.testing.assert_array_equal(np.asarray(out3[0]),
+                                      [[0] * 4, [7] * 4, [2] * 4])
+        np.testing.assert_array_equal(np.asarray(out3[1])[0], 0.0)
+
+    def test_stale_epoch_restores_refresh(self):
+        """Epoch comparison is inequality, not order: a reader that
+        recorded a newer tuple under an older epoch (the allowed race
+        direction) refreshes again on the next get — never serves
+        stale."""
+        cache = StackedOperandCache(2)
+        data = [(np.zeros(3, np.int32),), (np.zeros(3, np.int32),)]
+        cache.get("f", [4, 0], self._parts(data))
+        data[0] = (np.ones(3, np.int32),)
+        out = cache.get("f", [5, 0], self._parts(data))
+        np.testing.assert_array_equal(np.asarray(out[0])[0], 1)
+
+    def test_shape_change_rebuilds_family(self):
+        cache = StackedOperandCache(2)
+        data = [(np.zeros((2, 2), np.float32),),
+                (np.ones((2, 2), np.float32),)]
+        cache.get("f", [0, 0], self._parts(data))
+        # shard 0 doubled: both shards restack at the new shape
+        data = [(np.zeros((4, 2), np.float32),),
+                (np.ones((4, 2), np.float32),)]
+        calls = []
+        out = cache.get("f", [1, 0], self._parts(data, calls))
+        assert cache.stats.rebuilds == 2
+        assert sorted(calls) == [0, 1]
+        assert out[0].shape == (2, 4, 2)
+        # and the family is clean again at the new epochs
+        cache.get("f", [1, 0], self._parts(data))
+        assert cache.stats.hits == 1
+
+    def test_failed_refresh_commits_nothing(self):
+        """A parts() exception mid-refresh must not leave the entry
+        claiming freshness for the shards patched before the failure:
+        epochs and arrays commit together, after the whole loop."""
+        cache = StackedOperandCache(2)
+        data = [(np.zeros(3, np.int32),), (np.ones(3, np.int32),)]
+        cache.get("f", [0, 0], self._parts(data))
+        data[0] = (np.full(3, 5, np.int32),)
+
+        def bad_parts(s):
+            if s == 1:
+                raise RuntimeError("boom")
+            return tuple(jnp.asarray(a) for a in data[s])
+
+        with pytest.raises(RuntimeError):       # both shards dirty
+            cache.get("f", [1, 1], bad_parts)
+        assert cache.epochs("f") == [0, 0]      # nothing committed
+        out = cache.get("f", [1, 1], self._parts(data))
+        np.testing.assert_array_equal(np.asarray(out[0]),
+                                      [[5, 5, 5], [1, 1, 1]])
+
+    def test_donate_flag_safe_on_cpu(self):
+        """donate=True falls back to the non-donating refresh off
+        accelerators; semantics are unchanged."""
+        cache = StackedOperandCache(2, donate=True)
+        data = [(np.zeros(3, np.int32),), (np.ones(3, np.int32),)]
+        old = cache.get("f", [0, 0], self._parts(data))
+        data[1] = (np.full(3, 9, np.int32),)
+        out = cache.get("f", [0, 3], self._parts(data))
+        np.testing.assert_array_equal(np.asarray(out[0]),
+                                      [[0, 0, 0], [9, 9, 9]])
+        # the pre-refresh loan is still readable (no donation on CPU)
+        np.testing.assert_array_equal(np.asarray(old[0]),
+                                      [[0, 0, 0], [1, 1, 1]])
+
+    def test_epoch_arity_checked_and_invalidate(self):
+        cache = StackedOperandCache(2)
+        with pytest.raises(ValueError):
+            cache.get("f", [0], lambda s: (jnp.zeros(1),))
+        data = [(np.zeros(2, np.int32),), (np.zeros(2, np.int32),)]
+        cache.get("f", [0, 0], self._parts(data))
+        assert "f" in cache and cache.epochs("f") == [0, 0]
+        cache.invalidate("f")
+        assert "f" not in cache and cache.epochs("f") is None
+        cache.get("f", [0, 0], self._parts(data))
+        assert cache.stats.rebuilds == 2
+
+
+# ---------------------------------------------------------------------------
+# Routed kernel parity: per-shard two_level in {all-true, all-false, mixed}.
+# ---------------------------------------------------------------------------
+
+def _stacked_shards(rng, n_shards, keys_per_shard=160):
+    """N independent EH states + composed views, stacked (views padded
+    to the common slot capacity, exactly as the cache does)."""
+    states, views, probes = [], [], []
+    for s in range(n_shards):
+        st = eh.eh_create(8, 8, 256)
+        k = unique_keys(rng, keys_per_shard)
+        v = (np.arange(keys_per_shard, dtype=np.uint32)
+             + np.uint32(s * 10_000))
+        st = eh.eh_insert_many(st, jnp.asarray(k), jnp.asarray(v))
+        vs = max(1, 1 << int(st.global_depth))
+        vk, vv = eh.compose_shortcut(st, vs)
+        states.append(st)
+        views.append((vk, vv, vs.bit_length() - 1))
+        probes.append(k[:64])
+    v_cap = max(v[0].shape[0] for v in views)
+    pads = [(jnp.pad(v[0], ((0, v_cap - v[0].shape[0]), (0, 0))),
+             jnp.pad(v[1], ((0, v_cap - v[1].shape[0]), (0, 0))), v[2])
+            for v in views]
+    ops = dict(
+        keys=jnp.stack([jnp.asarray(p, jnp.uint32) for p in probes]),
+        dirs=jnp.stack([st.directory for st in states]),
+        bks=jnp.stack([st.bucket_keys for st in states]),
+        bvs=jnp.stack([st.bucket_vals for st in states]),
+        gds=jnp.asarray([int(st.global_depth) for st in states], jnp.int32),
+        vks=jnp.stack([p[0] for p in pads]),
+        vvs=jnp.stack([p[1] for p in pads]),
+        vls=jnp.asarray([p[2] for p in pads], jnp.int32))
+    return ops
+
+
+class TestRoutedKernelParity:
+    @pytest.mark.parametrize("flags", [
+        [1, 1, 1, 1],                    # all-true: every shard two-level
+        [0, 0, 0, 0],                    # all-false: every shard shortcut
+        [1, 0, 0, 1], [0, 1, 1, 0],      # mixed-sync groups
+    ])
+    def test_matches_static_kernels(self, rng, flags):
+        o = _stacked_shards(rng, 4)
+        ref = kmod.sharded_eh_lookup(o["keys"], o["dirs"], o["bks"],
+                                     o["bvs"], o["gds"], tile=64)
+        via_view = kmod.sharded_shortcut_lookup(o["keys"], o["vks"],
+                                                o["vvs"], o["vls"], tile=64)
+        np.testing.assert_array_equal(np.asarray(ref), np.asarray(via_view))
+        got = kmod.sharded_routed_lookup(
+            o["keys"], o["dirs"], o["bks"], o["bvs"], o["gds"],
+            o["vks"], o["vvs"], o["vls"],
+            jnp.asarray(flags, jnp.int32), tile=64)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+    def test_slot_width_mismatch_rejected(self, rng):
+        o = _stacked_shards(rng, 2)
+        with pytest.raises(ValueError, match="slot widths"):
+            kmod.sharded_routed_lookup(
+                o["keys"], o["dirs"], o["bks"], o["bvs"], o["gds"],
+                o["vks"][:, :, :4], o["vvs"][:, :, :4], o["vls"],
+                jnp.zeros(2, jnp.int32), tile=64)
+
+
+# ---------------------------------------------------------------------------
+# The cached sharded index end to end.
+# ---------------------------------------------------------------------------
+
+def _count_kernels(monkeypatch):
+    """Wrap the three sharded kernel entry points with call counters
+    (lookup_batched imports them from the module at call time)."""
+    counts = {"trad": 0, "shortcut": 0, "routed": 0}
+    for name, attr in (("trad", "sharded_eh_lookup"),
+                       ("shortcut", "sharded_shortcut_lookup"),
+                       ("routed", "sharded_routed_lookup")):
+        orig = getattr(kmod, attr)
+
+        def wrapper(*a, _orig=orig, _name=name, **kw):
+            counts[_name] += 1
+            return _orig(*a, **kw)
+
+        monkeypatch.setattr(kmod, attr, wrapper)
+    return counts
+
+
+class TestCachedShardedLookup:
+    def test_steady_state_hits_cache(self, rng):
+        keys = unique_keys(rng, 600)
+        vals = np.arange(600, dtype=np.uint32)
+        with ShardedShortcutEH(12, 8, 2048, num_shards=4) as idx:
+            idx.insert(keys, vals)
+            idx.pump()
+            np.testing.assert_array_equal(
+                np.asarray(idx.lookup_batched(keys)), vals)
+            built = idx.operands.stats.rebuilds
+            for _ in range(3):          # unchanged index: zero uploads
+                np.testing.assert_array_equal(
+                    np.asarray(idx.lookup_batched(keys)), vals)
+            assert idx.operands.stats.hits >= 3
+            assert idx.operands.stats.rebuilds == built
+            assert idx.operands.stats.slice_refreshes == 0
+
+    def test_refresh_is_per_dirty_shard(self, rng):
+        keys = unique_keys(rng, 600)
+        vals = np.arange(600, dtype=np.uint32)
+        with ShardedShortcutEH(12, 8, 2048, num_shards=4) as idx:
+            idx.insert(keys, vals)
+            idx.pump()
+            idx.lookup_batched(keys)                  # warm
+            # dirty exactly one shard (a single-key insert touches only
+            # the owning shard's mapper and state)
+            target = unique_keys(rng, 1, lo=2**31, hi=2**32 - 2)
+            idx.insert(target, np.asarray([999_999], np.uint32))
+            idx.pump()
+            before = idx.operands.stats.slice_refreshes
+            out = np.asarray(idx.lookup_batched(
+                np.concatenate([keys, target])))
+            np.testing.assert_array_equal(out[:-1], vals)
+            assert out[-1] == 999_999
+            # one dirty shard: at most one slice per consulted family
+            # (a mixed-routed batch touches both families) — never a
+            # per-shard restack of the whole index
+            refreshed = idx.operands.stats.slice_refreshes - before
+            assert refreshed <= 2
+
+    def test_gate_certified_view_never_stale(self, rng):
+        """Insert → pump → lookup must see the new key through the
+        cached shortcut path: the replay bumped the shard's epoch before
+        publishing the version the gate certifies, so the cache cannot
+        serve the pre-insert slice."""
+        keys = unique_keys(rng, 400)
+        vals = np.arange(400, dtype=np.uint32)
+        with ShardedShortcutEH(12, 8, 2048, num_shards=2) as idx:
+            idx.insert(keys[:200], vals[:200])
+            idx.pump()
+            idx.lookup_batched(keys[:200])            # warm both families
+            for i in range(200, 400, 50):
+                idx.insert(keys[i:i + 50], vals[i:i + 50])
+                idx.pump()
+                assert idx.in_sync()
+                got = np.asarray(idx.lookup_batched(keys[:i + 50]))
+                np.testing.assert_array_equal(got, vals[:i + 50])
+
+    def test_mixed_gates_resolve_in_one_routed_dispatch(
+            self, rng, monkeypatch):
+        keys = unique_keys(rng, 800)
+        vals = np.arange(800, dtype=np.uint32)
+        with ShardedShortcutEH(12, 8, 2048, num_shards=4) as idx:
+            idx.insert(keys, vals)
+            idx.pump()
+            assert idx.in_sync()
+            # shards 1 and 2 refuse the shortcut (threshold below any
+            # possible fan-in), 0 and 3 accept
+            idx.shards[1].fan_in_threshold = -1.0
+            idx.shards[2].fan_in_threshold = -1.0
+            counts = _count_kernels(monkeypatch)
+            misses = unique_keys(rng, 100, lo=2**31, hi=2**32 - 2)
+            probe = np.concatenate([keys, misses])
+            got = np.asarray(idx.lookup_batched(probe))
+            assert counts == {"trad": 0, "shortcut": 0, "routed": 1}, \
+                "a mixed-sync group must fuse into ONE routed dispatch"
+            expect = np.concatenate(
+                [vals, np.full(100, 0xFFFFFFFF, np.uint32)])
+            np.testing.assert_array_equal(got, expect)
+            # flipping every shard traditional uses the static kernel
+            for s in idx.shards:
+                s.fan_in_threshold = -1.0
+            got = np.asarray(idx.lookup_batched(probe))
+            np.testing.assert_array_equal(got, expect)
+            assert counts["trad"] == 1 and counts["routed"] == 1
+
+    def test_empty_batch_short_circuits(self, rng, monkeypatch):
+        keys = unique_keys(rng, 200)
+        with ShardedShortcutEH(12, 8, 2048, num_shards=2) as idx:
+            idx.insert(keys, np.arange(200, dtype=np.uint32))
+            idx.pump()
+            counts = _count_kernels(monkeypatch)
+            routed = (idx.routed_shortcut, idx.routed_traditional)
+            out = idx.lookup_batched(np.empty(0, np.uint32))
+            assert out.shape == (0,) and out.dtype == jnp.uint32
+            out = idx.lookup(np.empty(0, np.uint32))
+            assert out.shape == (0,)
+            assert sum(counts.values()) == 0          # no dispatch at all
+            assert (idx.routed_shortcut, idx.routed_traditional) == routed
+            assert idx.operands.stats.rebuilds == 0   # cache untouched
+
+
+class TestKVEmptyBatch:
+    def test_get_context_empty_returns_without_device_work(self, rng):
+        from repro.kvcache import paged_cache as pc
+        from repro.kvcache.shortcut_cache import ShortcutKVManager
+        L, nb, bs, KV, hd, max_seqs, cap = 2, 32, 4, 2, 8, 4, 32
+        cache = pc.cache_create(L, nb, bs, KV, hd, max_seqs, cap // bs,
+                                dtype=jnp.float32)
+        with ShortcutKVManager(cache, seq_capacity=cap,
+                               num_shards=2) as mgr:
+            routed = (mgr.routed_shortcut, mgr.routed_paged)
+            k, v, route = mgr.get_context(np.empty(0, np.int64))
+            assert k.shape == (L, 0, KV, cap, hd)
+            assert v.shape == (L, 0, KV, cap, hd)
+            assert route in ("shortcut", "paged")
+            assert (mgr.routed_shortcut, mgr.routed_paged) == routed
+            # an explicitly requested route is echoed back
+            _, _, route = mgr.get_context(np.empty(0, np.int64),
+                                          route="shortcut")
+            assert route == "shortcut"
+
+
+# ---------------------------------------------------------------------------
+# Cache coherence under concurrent async replays (satellite acceptance:
+# randomized parity with mappers publishing mid-stream; no torn stacks;
+# a slice older than the gate-certified epoch is never served).
+# ---------------------------------------------------------------------------
+
+class TestAsyncCoherence:
+    @pytest.mark.parametrize("num_shards", [2, 4])
+    def test_randomized_parity_with_publishing_mappers(self, rng,
+                                                       num_shards):
+        """Inserts are synchronous (authoritative), replays land on the
+        mapper threads whenever they land: every batched lookup must
+        still read its own writes — the version gate demotes stale
+        shards to the traditional path per shard, and any shortcut slice
+        the cache serves must be at least as new as the gate certified.
+        A torn stack (keys slice from one publication, vals from
+        another) or a stale cached slice breaks oracle parity."""
+        keys = unique_keys(rng, 900)
+        vals = np.arange(900, dtype=np.uint32)
+        misses = unique_keys(rng, 120, lo=2**31, hi=2**32 - 2)
+        oracle = {}
+        idx = ShardedShortcutEH(12, 8, 2048, num_shards=num_shards,
+                                async_mapper=True, poll_interval=0.001)
+        try:
+            step = 90
+            for i in range(0, 900, step):
+                kb, vb = keys[i:i + step], vals[i:i + step]
+                idx.insert(kb, vb)
+                oracle.update(zip(kb.tolist(), vb.tolist()))
+                probe = np.concatenate([keys[:i + step], misses])
+                perm = rng.permutation(probe.size)
+                probe = probe[perm]
+                expect = np.asarray(
+                    [oracle.get(int(k), 0xFFFFFFFF) for k in probe],
+                    np.uint32)
+                for _ in range(3):      # replays race these lookups
+                    got = np.asarray(idx.lookup_batched(probe))
+                    np.testing.assert_array_equal(got, expect)
+            assert idx.wait_in_sync(timeout=60.0)
+            got = np.asarray(idx.lookup_batched(keys))
+            np.testing.assert_array_equal(got, vals)
+            # the steady-state read after sync is served from cache
+            h0 = idx.operands.stats.hits
+            np.testing.assert_array_equal(
+                np.asarray(idx.lookup_batched(keys)), vals)
+            assert idx.operands.stats.hits > h0
+        finally:
+            idx.close()
+
+    def test_concurrent_readers_share_cache_consistently(self, rng):
+        """Two reader threads hammer lookup_batched while the main
+        thread inserts and async mappers replay: the cache lock must
+        keep every served stack internally consistent (parity holds in
+        every reader at every step)."""
+        keys = unique_keys(rng, 600)
+        vals = np.arange(600, dtype=np.uint32)
+        idx = ShardedShortcutEH(12, 8, 2048, num_shards=2,
+                                async_mapper=True, poll_interval=0.001)
+        idx.insert(keys[:300], vals[:300])
+        idx.pump()
+        errors = []
+        stop = threading.Event()
+
+        def reader(seed):
+            r = np.random.default_rng(seed)
+            known = keys[:300]
+            try:
+                while not stop.is_set():
+                    probe = r.choice(known, 64)
+                    got = np.asarray(idx.lookup_batched(probe))
+                    want = np.asarray(
+                        [vals[np.nonzero(keys == k)[0][0]] for k in probe],
+                        np.uint32)
+                    np.testing.assert_array_equal(got, want)
+            except Exception as e:      # pragma: no cover
+                errors.append(e)
+
+        threads = [threading.Thread(target=reader, args=(s,))
+                   for s in (1, 2)]
+        for t in threads:
+            t.start()
+        try:
+            for i in range(300, 600, 60):
+                idx.insert(keys[i:i + 60], vals[i:i + 60])
+        finally:
+            stop.set()
+            for t in threads:
+                t.join(timeout=60.0)
+            idx.close()
+        assert not errors, errors
