@@ -30,6 +30,81 @@ from benchmarks.common import Row, emit
 ALL = ("table1", "fig2", "fig4", "fig5", "fig7", "fig8", "kv_shortcut",
        "sharded")
 
+# Per-row strict-compare factors, keyed ``(bench, name)``; rows not
+# listed use DEFAULT_FACTOR.  Calibrated from 4 repeated
+# ``--scale 0.002`` runs on a single-core CI-class host: each bound is
+# ~1.7x the observed max/min spread of its row.  Three bands:
+#
+#   * 1.3x  — spread stayed under ~12% (deterministic footprints, the
+#     N>=4 churn/cached rows, the big fig7 insert walls);
+#   * 1.5-1.7x — spread 12-35%;
+#   * >2x   — rows whose spread already exceeded the old uniform 2.0
+#     default (sub-second timings at N<=2, host-scheduling-bound pump
+#     paths): a uniform 2.0 was silently flaky for these, so their
+#     bounds are *loosened* to match measured reality.
+#
+# The replay_throughput_shards* rows pay a *deliberate* publish-side
+# copy since the zero-copy lookup landed (the slice patch moved from
+# the lookup path to the mapper thread) — do NOT tighten those below
+# the default regardless of measured spread.
+DEFAULT_FACTOR = 2.0
+STRICT_FACTORS: dict = {
+    # -- tight (1.3x): stable across runs ----------------------------------
+    ("fig7a", "HT_total_insert"): 1.3,
+    ("fig7a", "HTI_total_insert"): 1.3,
+    ("fig7b", "CH_lookup"): 1.3,
+    ("sharded", "insert_N1"): 1.3,
+    ("sharded", "churn_lookup_N1_k1"): 1.3,
+    ("sharded", "churn_lookup_N4_k1"): 1.3,
+    ("sharded", "churn_lookup_N4_k4"): 1.3,
+    ("sharded", "cached_speedup_N4"): 1.3,
+    ("sharded", "operand_mib_N1"): 1.3,
+    ("sharded", "operand_mib_N2"): 1.3,
+    ("sharded", "operand_mib_N4"): 1.3,
+    ("sharded", "operand_mib_N8"): 1.3,
+    # -- mid (1.5-1.7x) ----------------------------------------------------
+    ("fig7b", "HTI_lookup"): 1.5,
+    ("fig7b", "HT_lookup"): 1.5,
+    ("fig7b", "ShortcutEH_lookup"): 1.5,
+    ("sharded", "batched_lookup_N4"): 1.5,
+    ("sharded", "churn_lookup_N8_k8"): 1.5,
+    ("sharded", "churn_lookup_N2_k1"): 1.5,
+    ("sharded", "restack_lookup_N4"): 1.5,
+    ("fig7b", "EH_lookup"): 1.7,
+    ("fig7a", "ShortcutEH_total_insert"): 1.7,
+    ("fig7a", "CH_total_insert"): 1.7,
+    ("fig7a", "EH_total_insert"): 1.7,
+    ("kv_shortcut", "compose_view_all_seqs"): 1.7,
+    ("sharded", "batched_lookup_N8"): 1.7,
+    ("sharded", "cached_speedup_N2"): 1.7,
+    ("sharded", "cached_speedup_N8"): 1.7,
+    ("sharded", "insert_N8"): 1.7,
+    ("sharded", "restack_lookup_N8"): 1.7,
+    ("sharded", "routed_lookup_N4"): 1.7,
+    # -- looser than the old default (measured spread > ~1.65x) ------------
+    ("kv_shortcut", "append_update_request"): 2.8,
+    ("kv_shortcut", "paged_gather_context"): 2.8,
+    ("kv_shortcut", "shortcut_slice_raw"): 2.8,
+    ("sharded", "churn_lookup_N2_k2"): 2.8,
+    ("kv_shortcut", "replay_throughput_shards1"): 3.5,
+    ("kv_shortcut", "shortcut_slice_context"): 3.5,
+    ("sharded", "batched_lookup_N2"): 3.5,
+    ("sharded", "churn_lookup_N8_k1"): 3.5,
+    ("sharded", "insert_N4"): 3.5,
+    ("sharded", "restack_lookup_N1"): 3.5,
+    ("sharded", "restack_lookup_N2"): 3.5,
+    ("kv_shortcut", "paged_gather_raw"): 4.0,
+    ("sharded", "insert_N2"): 4.5,
+    ("kv_shortcut", "replay_throughput_shards2"): 6.0,
+    ("sharded", "batched_lookup_N1"): 6.0,
+    ("sharded", "routed_lookup_N2"): 8.0,
+    ("sharded", "cached_speedup_N1"): 10.0,
+}
+
+
+def _strict_factor(bench: str, name: str) -> float:
+    return STRICT_FACTORS.get((bench, name), DEFAULT_FACTOR)
+
 
 def _regression_ratio(row: Row, prev: dict) -> float:
     """How many times worse ``row`` is than ``prev`` (1.0 = unchanged);
@@ -40,18 +115,25 @@ def _regression_ratio(row: Row, prev: dict) -> float:
     base = row.unit.split("/")[0]
     if base in ("s", "ms", "us", "ns"):       # time-like: lower is better
         return cur_v / prev_v
+    if base in ("B", "KiB", "MiB", "GiB"):    # footprint: lower is better
+        return cur_v / prev_v
     if row.unit.endswith("/s"):               # throughput: higher is better
+        return prev_v / cur_v
+    if row.unit == "x":                       # speedup ratio: higher is better
         return prev_v / cur_v
     return 0.0
 
 
 def compare_to_previous(rows: list, prev_path: str,
-                        factor: float = 2.0, strict: bool = False) -> int:
-    """Print a WARNING per row regressed >``factor``x vs the previous
+                        factor: float = None, strict: bool = False) -> int:
+    """Print a WARNING per row regressed past its per-row factor
+    (``STRICT_FACTORS``, default ``DEFAULT_FACTOR``) vs the previous
     ``--json`` artifact; returns the number of warnings (``main`` turns
-    a nonzero count into exit code 3 under ``--strict``).  A missing or
-    unreadable artifact is a note, not an error (first run, expired
-    artifact) — strict mode only fails on *measured* regressions."""
+    a nonzero count into exit code 3 under ``--strict``).  Passing
+    ``factor`` overrides the table for every row (tests use this).  A
+    missing or unreadable artifact is a note, not an error (first run,
+    expired artifact) — strict mode only fails on *measured*
+    regressions."""
     try:
         with open(prev_path) as f:
             prev_rows = json.load(f)
@@ -67,20 +149,23 @@ def compare_to_previous(rows: list, prev_path: str,
         p = prev.get((r.bench, r.name))
         if p is None or p.get("unit") != r.unit:
             continue
+        row_factor = (factor if factor is not None
+                      else _strict_factor(r.bench, r.name))
         ratio = _regression_ratio(r, p)
-        if ratio > factor:
+        if ratio > row_factor:
             warned += 1
             print(f"WARNING: perf regression {r.bench},{r.name}: "
                   f"{p['value']:.6g} -> {r.value:.6g} {r.unit} "
-                  f"({ratio:.2f}x worse)", file=sys.stderr)
+                  f"({ratio:.2f}x worse, bound {row_factor:.2f}x)",
+                  file=sys.stderr)
     if warned:
-        print(f"compare: {warned} row(s) regressed >{factor}x vs "
+        print(f"compare: {warned} row(s) regressed past their bound vs "
               f"{prev_path} "
               f"({'FAILING (--strict)' if strict else 'warning only'})",
               file=sys.stderr)
     else:
-        print(f"compare: no >{factor}x regressions vs {prev_path}",
-              file=sys.stderr)
+        print(f"compare: no regressions past per-row bounds vs "
+              f"{prev_path}", file=sys.stderr)
     return warned
 
 

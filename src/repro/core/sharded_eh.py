@@ -79,47 +79,15 @@ def _trad_parts(states):
     shard's ``(directory, bucket_keys, bucket_vals, global_depth)``
     drawn from the consistent per-shard state snapshots.  Shapes are
     static (the directory is allocated at ``max_global_depth``), so this
-    family never rebuilds after its first stack."""
+    family never rebuilds after its first stack.  Built lazily by the
+    first traditional-routed batched lookup (pull mode), then kept warm
+    by ``insert``'s write-time push — a shortcut-routed steady state
+    never holds this stack at all."""
     def parts(s):
         st = states[s]
         return (st.directory, st.bucket_keys, st.bucket_vals,
                 st.global_depth)
     return parts
-
-
-def _view_parts(views):
-    """Operand-cache part builder for the shortcut family: one shard's
-    ``(view_keys, view_vals, view_log2)``, zero-padded on the slot axis
-    to the current cross-shard maximum so the stack stays shape-uniform
-    (rows past ``2**view_log2`` are never indexed — the kernel slots by
-    the shard's own log2).  A shard whose view doubled past the common
-    capacity changes the part shape and triggers a full-family rebuild
-    (the only remaining O(index) path).  A shard with no composed view
-    yet contributes a zero placeholder at log2 0; its ``shortcut_ok``
-    flag keeps it on the traditional path, so the placeholder is only
-    ever probed by pad lanes."""
-    v_cap = max([1] + [v[0].shape[0] for v in views if v is not None])
-
-    def parts(s):
-        v = views[s]
-        if v is None:
-            z = jnp.zeros((v_cap,) + _slot_shape(views), jnp.uint32)
-            return (z, z, jnp.zeros((), jnp.int32))
-        vk, vv, vlog2 = v
-        if vk.shape[0] < v_cap:
-            grow = ((0, v_cap - vk.shape[0]), (0, 0))
-            vk = jnp.pad(vk, grow)
-            vv = jnp.pad(vv, grow)
-        return (vk, vv, jnp.asarray(vlog2, jnp.int32))
-    return parts
-
-
-def _slot_shape(views):
-    """(bucket_slots,) of the first composed view — placeholder width."""
-    for v in views:
-        if v is not None:
-            return v[0].shape[1:]
-    return (1,)
 
 
 class ShardedShortcutEH:
@@ -153,10 +121,15 @@ class ShardedShortcutEH:
             [s.mapper for s in self.shards],
             router=lambda key: int(shard_of_keys(
                 np.asarray([key], np.uint32), self.shard_bits)[0]))
-        # device-resident stacked lookup operands, refreshed per dirty
-        # shard (epoch-keyed; families "eh_trad" / "eh_view") — the
-        # batched path stopped re-stacking the whole index per call
+        # primary storage of the stacked lookup operands (families
+        # "eh_view" / "eh_trad", DESIGN.md §4.4): replays publish their
+        # shard's slice straight into the stack at publish time, so the
+        # batched lookup path is an epoch check + handle return with
+        # zero device work in steady state, and per-shard views exist
+        # only as memoized slices of the stack (no duplicates)
         self.operands = StackedOperandCache(num_shards)
+        for i, s in enumerate(self.shards):
+            s.bind_operand_cache(self.operands, i)
 
     # -- routing -------------------------------------------------------------
 
@@ -238,30 +211,29 @@ class ShardedShortcutEH:
             keys, sid, self.num_shards, cap,
             order=order, counts=counts, starts=starts)
         # Gate every shard FIRST (each policy decides exactly once — no
-        # short-circuit), then read publish epochs, then snapshot: a
-        # replay landing after the gate publishes a strictly newer view,
-        # which the gates' verdict still covers — and it bumps its epoch
-        # before its sc_version, so the cache sees any gate-certified
-        # publication as dirty (never serves a slice older than what the
-        # gate certified).  ONE snapshot per shard (view tuples swap
-        # atomically; EHStates are reassigned whole), read AFTER the
-        # epochs so an epoch can only ever under-describe its snapshot.
+        # short-circuit), then read publish epochs/flags: replays
+        # publish into the stack BEFORE bumping view_epoch and BEFORE
+        # sc_version, so any view a gate certifies is already resident
+        # at a covering epoch — get("eh_view", epochs) below is a pure
+        # epoch check + handle return, never a patch.  The traditional
+        # family stays pull-mode: built lazily here from the per-shard
+        # state snapshots (read AFTER the epochs, so an epoch can only
+        # under-describe its snapshot), kept warm by insert's push.
         gates = [s.mapper.gate(s.avg_fan_in(), [GLOBAL_VIEW])
                  for s in self.shards]
         view_epochs = [s.view_epoch for s in self.shards]
         state_epochs = [s.state_epoch for s in self.shards]
-        views = [s.view_snapshot() for s in self.shards]
         states = [s.state for s in self.shards]
-        shortcut_ok = [g and v is not None
-                       for g, v in zip(gates, views)]
+        pub = self.operands.published("eh_view")
+        shortcut_ok = [g and pub is not None and pub[i]
+                       for i, g in enumerate(gates)]
         involved = [int(s) for s in np.nonzero(counts)[0]]
         for s in involved:
             self.group.count_route(shortcut_ok[s], shard=s)
         n_sc = sum(1 for s in involved if shortcut_ok[s])
         keys_dev = jnp.asarray(padded)
         if n_sc:
-            view_ops = self.operands.get(
-                "eh_view", view_epochs, _view_parts(views))
+            view_ops = self.operands.get("eh_view", view_epochs)
         if n_sc < len(involved):
             trad_ops = self.operands.get(
                 "eh_trad", state_epochs, _trad_parts(states))

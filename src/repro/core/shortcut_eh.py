@@ -78,7 +78,14 @@ class ShortcutEH:
         # (view_keys, view_vals, view_log2): replays publish a fully
         # built tuple and readers snapshot it once, so a reader racing
         # an async replay can never pair new keys with old vals.
+        # When bound to a StackedOperandCache (bind_operand_cache), the
+        # stack owns the view instead and _view stays None — per-shard
+        # reads become memoized slices of the stack (DESIGN.md §4.4).
         self._view: Optional[tuple] = None
+        self._cache = None                  # StackedOperandCache or None
+        self._shard = 0
+        self._vfam = "eh_view"
+        self._tfam = "eh_trad"
         self.mapper = ShortcutMapper(
             replay_create=self._replay_create,
             replay_update=self._replay_update,
@@ -139,25 +146,66 @@ class ShortcutEH:
     def view_epoch(self) -> int:
         return self.mapper.view_epoch
 
+    # -- operand-cache binding (inverted ownership, DESIGN.md §4.4) ----------
+
+    def bind_operand_cache(self, cache, shard: int, *,
+                           view_family: str = "eh_view",
+                           trad_family: str = "eh_trad") -> None:
+        """Hand view ownership to a stacked operand cache.
+
+        After binding, replays publish straight into the owning shard's
+        slice of the stacked ``view_family`` (at the mapper's
+        ``next_view_epoch``, before ``sc_version`` moves), inserts keep
+        ``trad_family`` warm once a lookup built it, and every per-shard
+        view read is a memoized slice of the stack — the local ``_view``
+        duplicate is deleted.  Bind before any maintenance is enqueued
+        (``ShardedShortcutEH`` binds at construction)."""
+        self._cache = cache
+        self._shard = int(shard)
+        self._vfam = view_family
+        self._tfam = trad_family
+        self._view = None        # the stack is the primary storage now
+        self._bound_memo = None
+
+    def _bound_view(self) -> Optional[tuple]:
+        """(view_keys, view_vals, view_log2) slices of the stack, or
+        None before this shard's first publication.  view_keys/vals are
+        padded to the stacked extent; rows past ``2**view_log2`` are
+        never indexed (the lookup slots by the shard's own log2).
+        Memoized on the cache's slice identity, so the device->host
+        ``view_log2`` read happens once per publish, not per lookup."""
+        pub = self._cache.published(self._vfam)
+        if pub is None or not pub[self._shard]:
+            return None
+        sl = self._cache.slice_of(self._vfam, self._shard)
+        memo = self._bound_memo
+        if memo is not None and memo[0] is sl:
+            return memo[1]
+        view = (sl[0], sl[1], int(sl[2]))
+        self._bound_memo = (sl, view)
+        return view
+
     # -- view snapshot (atomic read; see _view comment in __init__) ----------
 
     def view_snapshot(self) -> Optional[tuple]:
         """One consistent (view_keys, view_vals, view_log2) or None."""
+        if self._cache is not None:
+            return self._bound_view()
         return self._view
 
     @property
     def view_keys(self) -> Optional[jax.Array]:
-        v = self._view
+        v = self.view_snapshot()
         return None if v is None else v[0]
 
     @property
     def view_vals(self) -> Optional[jax.Array]:
-        v = self._view
+        v = self.view_snapshot()
         return None if v is None else v[1]
 
     @property
     def view_log2(self) -> int:
-        v = self._view
+        v = self.view_snapshot()
         return -1 if v is None else v[2]
 
     # -- main-thread API ----------------------------------------------------
@@ -172,6 +220,17 @@ class ShortcutEH:
             self.state = eh.eh_insert_many(self.state, keys, values)
             new_g = int(self.state.global_depth)
             versions = self.mapper.record([GLOBAL_VIEW])
+            if self._cache is not None:
+                # keep the stacked traditional family warm at publish
+                # (write) time — but only once a lookup actually built
+                # it; a shortcut-routed steady state never pays for (or
+                # holds) the traditional stack at all
+                st = self.state
+                self._cache.publish_if_present(
+                    self._tfam, self._shard,
+                    lambda: (st.directory, st.bucket_keys,
+                             st.bucket_vals, st.global_depth),
+                    epoch=self.mapper.trad_epoch)
         if new_g != old_g:
             # doubling: the runtime pops outdated updates before the create
             self.mapper.submit_create([GLOBAL_VIEW], versions)
@@ -189,17 +248,28 @@ class ShortcutEH:
         # still covers; snapshotting first would let the gate certify
         # a stale tuple (async mode could then serve pre-insert data)
         use = self.mapper.gate(self.avg_fan_in(), [GLOBAL_VIEW])
-        view = self._view     # single read: the replay swap is atomic
+        view = self.view_snapshot()   # single read: the swap is atomic
         use = use and view is not None
         self.mapper.count_route(use)
         if use:
+            if self._cache is not None and \
+                    jax.default_backend() in ("tpu", "gpu"):
+                # resolve straight off the stacked primary: the kernel
+                # block-selects the shard via scalar prefetch, so no
+                # per-shard slice is ever materialized on device
+                from repro.kernels.eh_lookup import stacked_shortcut_lookup
+                ops = self._cache.handle(self._vfam)
+                return stacked_shortcut_lookup(keys, *ops, self._shard)
             # the tuple's own view_log2, never the live global_depth: a
-            # doubling after the snapshot would index past the view
+            # doubling after the snapshot would index past the view.
+            # Bound mode pays nothing extra here: view_snapshot is the
+            # cache's memoized slice of the stack (zero device work in
+            # steady state; the slice cost was paid at publish time).
             return eh.shortcut_lookup_many(view[0], view[1], view[2], keys)
         return eh.eh_lookup_many(self.state, keys)
 
     def use_shortcut(self) -> bool:
-        return (self._view is not None
+        return (self.view_snapshot() is not None
                 and self.mapper.gate(self.avg_fan_in(), [GLOBAL_VIEW]))
 
     def in_sync(self) -> bool:
@@ -226,14 +296,32 @@ class ShortcutEH:
     # -- replay callables (the only EH-specific maintenance code) ------------
 
     def _view_arrays(self):
+        if self._cache is not None:
+            # the stacked family IS the published object readers get
+            return self._cache.handle(self._vfam) or ()
         view = self._view
         return () if view is None else view[:2]
+
+    def _publish_view(self, vk, vv, vlog2: int) -> None:
+        """Publish one replayed view: bound mode writes the owning
+        shard's slice of the stack at the mapper's ``next_view_epoch``
+        (zero-copy publish — this runs on the mapper thread, before
+        ``sc_version`` moves; a view grown past the stacked extent
+        triggers the cache's background re-stack); standalone mode is
+        the classic atomic tuple swap."""
+        if self._cache is not None:
+            self._cache.publish(
+                self._vfam, self._shard,
+                (vk, vv, jnp.asarray(vlog2, jnp.int32)),
+                epoch=self.mapper.next_view_epoch)
+            return
+        self._view = (vk, vv, vlog2)
 
     def _replay_create(self, st: eh.EHState, requests) -> None:
         g = int(st.global_depth)
         view_slots = _next_pow2(1 << g)
         vk, vv = eh.compose_shortcut(st, view_slots)
-        self._view = (vk, vv, view_slots.bit_length() - 1)
+        self._publish_view(vk, vv, view_slots.bit_length() - 1)
         self.mapper.stats.slots_remapped += view_slots
 
     def _replay_update(self, st: eh.EHState, requests) -> None:
@@ -245,7 +333,7 @@ class ShortcutEH:
         own current bucket (a no-op), mirroring the paper's coalescing of
         neighbouring remaps into fewer calls.
         """
-        view = self._view
+        view = self.view_snapshot()
         if view is None:
             # the composed view already reflects the snapshot (and thus
             # these updates); remapping on top would be duplicate work
@@ -258,6 +346,13 @@ class ShortcutEH:
         stale = np.isin(dir_np, touched)
         slots = np.nonzero(stale)[0].astype(np.int32)
         if slots.size == 0:
+            if self._cache is not None:
+                # no stale slots, but the reader is still owed an epoch:
+                # this _process will bump view_epoch and publish its
+                # sc versions, and the entry must never lag a
+                # gate-certified version
+                self._cache.touch(self._vfam, self._shard,
+                                  epoch=self.mapper.next_view_epoch)
             return
         n = _pad_chunk(slots.size)
         pad = n - slots.size
@@ -265,7 +360,7 @@ class ShortcutEH:
         offsets_p = dir_np[slots_p].astype(np.int32)
         vk = rewiring.remap_slots(vk, st.bucket_keys, slots_p, offsets_p)
         vv = rewiring.remap_slots(vv, st.bucket_vals, slots_p, offsets_p)
-        self._view = (vk, vv, vlog2)
+        self._publish_view(vk, vv, vlog2)
         self.mapper.stats.slots_remapped += int(slots.size)
 
     def __enter__(self):

@@ -25,6 +25,12 @@ composed view *inside the same dispatch* — a mixed-sync shard group
 demotes the whole batch.  The flag is uniform per grid cell, so each
 cell runs exactly one ``pl.when`` arm of the shared body.
 
+:func:`stacked_shortcut_lookup` is the flat (single-shard) path against
+the stacked **primary** operand storage (``runtime/operand_cache``,
+DESIGN.md §4.4): the shard index arrives by scalar prefetch and the
+block index maps select that shard's block of the ``(N, V, S)`` stack
+directly — no per-shard slice is ever materialized on device.
+
 TPU adaptation notes (DESIGN.md §2): the VPU has no scatter/gather to HBM,
 so both kernels keep the directory and bucket pages VMEM-resident (block =
 one shard's full structure; for the assigned sizes — 2^14 slots x 64-slot
@@ -226,6 +232,56 @@ def sharded_shortcut_lookup(keys, view_keys, view_vals, global_depths, *,
     dummy_dir = jnp.zeros((keys.shape[0], 1), jnp.int32)
     return _run(keys, dummy_dir, view_keys, view_vals, global_depths,
                 two_level=False, tile=tile, interpret=interpret)
+
+
+def _stacked_select_kernel(sc_ref, keys_ref, vk_ref, vv_ref, out_ref, *,
+                           tile: int, slots: int):
+    """One key-tile grid cell against ONE shard's block of the stacked
+    view, block-selected by the scalar-prefetched shard index (the block
+    index maps read ``sc_ref[0]``) — the stack never leaves its resting
+    place and no per-shard slice is materialized.  ``sc_ref[1]`` is the
+    selected shard's view log2."""
+    _resolve_tile(keys_ref[0], sc_ref[1], None, vk_ref, vv_ref, out_ref,
+                  tile=tile, slots=slots, two_level=False)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def stacked_shortcut_lookup(keys, view_keys, view_vals, view_log2s,
+                            shard, *, tile: int = 256,
+                            interpret: Optional[bool] = None):
+    """Single-shard shortcut lookup resolved straight off the stacked
+    primary storage (``runtime/operand_cache``, DESIGN.md §4.4).
+
+    keys: (K,); view_keys/vals: the full (N, V, S) stacks; view_log2s:
+    (N,); ``shard`` selects which block the grid reads — via scalar
+    prefetch, so all shards (and all shard *indices*) share one compiled
+    specialization, and the flat per-shard lookup path needs no device
+    copy of its shard's view."""
+    n = keys.shape[0]
+    pad = (-n) % tile
+    if pad:
+        keys = jnp.pad(keys, ((0, pad),))
+    nt = (n + pad) // tile
+    V, S = view_keys.shape[1:]
+    sidx = jnp.asarray(shard, jnp.int32)
+    scalars = jnp.stack([sidx, view_log2s.astype(jnp.int32)[sidx]])
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,          # (shard, its view log2) in SMEM
+        grid=(nt,),
+        in_specs=[
+            pl.BlockSpec((1, tile), lambda i, sc: (0, i)),
+            pl.BlockSpec((1, V, S), lambda i, sc: (sc[0], 0, 0)),
+            pl.BlockSpec((1, V, S), lambda i, sc: (sc[0], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tile), lambda i, sc: (0, i)),
+    )
+    kernel = functools.partial(_stacked_select_kernel, tile=tile, slots=S)
+    out = pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((1, n + pad), jnp.uint32),
+        interpret=resolve_interpret(interpret),
+    )(scalars, keys.astype(jnp.uint32)[None], view_keys, view_vals)
+    return out[0, :n]
 
 
 @functools.partial(jax.jit, static_argnames=("tile", "interpret"))

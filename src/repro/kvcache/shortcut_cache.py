@@ -19,22 +19,23 @@ and a fragmentation statistic (the fan-in analogue) decides routing
 **Sharded mode** (``num_shards > 1``, DESIGN.md §4.2): sequences partition
 across a :class:`~repro.runtime.shard_group.MapperGroup` by
 ``seq_id % N``, and — unlike the first sharded iteration, which kept one
-whole-batch view pair behind a global view lock — the view tensors are
-**per shard** too: shard ``s`` owns one
-``(L, seqs_per_shard, S_cap, KV, hd)`` k/v pair holding the rows of its
-sequences (shard-local row ``seq_id // N``), registered in a
-:class:`~repro.runtime.shard_group.ShardViewRegistry`.  A replay thread
-therefore mutates only arrays its shard owns and publishes the result as
-ONE atomic tuple swap of its registry slot — the replay path acquires no
-cross-shard lock (there is no view lock at all), and a reader snapshots a
-slot once so it can never pair a ``view_k`` from one publication with the
-``view_v`` of another.  Cross-shard reads (``get_context`` over a batch
-spanning shards) gather from a device-resident stacked
-``(N, L, rows, S_cap, KV, hd)`` pair held by a
-:class:`~repro.runtime.operand_cache.StackedOperandCache` and refreshed
-only for shards that published since the previous batch (epoch-keyed,
-DESIGN.md §4.3) — one fused two-axis gather in input order replaces the
-old per-call argsort/pad/per-shard-gather/scatter-back pass.
+whole-batch view pair behind a global view lock — the view state is
+**per shard** too: shard ``s`` owns the rows of its sequences
+(shard-local row ``seq_id // N``).  The PRIMARY storage is one stacked
+``(N, L, seqs_per_shard, S_cap, KV, hd)`` k/v pair held by a
+:class:`~repro.runtime.operand_cache.StackedOperandCache` (family
+"kv_view", DESIGN.md §4.4); the
+:class:`~repro.runtime.shard_group.ShardViewRegistry` is a per-shard
+facade of it.  A replay thread reads its shard's memoized slice of the
+stack, chains the functional updates, and publishes ONE slice write back
+into the stack — at the mapper's ``next_view_epoch``, *before*
+``sc_version`` moves — so the replay path acquires no cross-shard lock
+(there is no view lock at all), and a reader's snapshot is drawn from
+one atomically-swapped stacked tuple (it can never pair a ``view_k``
+from one publication with the ``view_v`` of another).  Reads
+(``get_context`` over any batch) take the stack by handle after a pure
+epoch check — zero refresh work on the read path in steady state — and
+gather rows with one fused two-axis gather in input order.
 """
 from __future__ import annotations
 
@@ -60,7 +61,18 @@ def compose_seq(cache: pc.PagedKVCache, view_k: jax.Array, view_v: jax.Array,
 
     view_k/view_v: (L, rows_per_shard, S_cap, KV, hd); ``seq_id`` indexes
     the authoritative cache, ``row`` the shard-local view row owning it
-    (``seq_id // num_shards``; with one shard, ``row == seq_id``)."""
+    (``seq_id // num_shards``; with one shard, ``row == seq_id``).
+
+    Positions at or past the sequence's current length are written as
+    **zeros**, not whatever the pool holds there.  Unset block-table
+    entries read (via the ``maximum(…, 0)`` guard) physical block 0, and
+    the tail of the last partial block carries stale rows from whatever
+    sequence last recycled those blocks — both are functions of *when*
+    the replay ran, so leaving them in the view made two managers
+    replaying the same schedule at different times publish bit-different
+    rows past ``seq_len`` (the ``test_randomized_schedule_parity``
+    flake).  Masking pins every position ≥ ``seq_len`` to zero, making
+    the composed row a pure function of the sequence's content."""
     table = jnp.maximum(cache.block_tables[seq_id], 0)    # (MB,)
     L = cache.k_pool.shape[0]
     bs = cache.block_size
@@ -69,8 +81,11 @@ def compose_seq(cache: pc.PagedKVCache, view_k: jax.Array, view_v: jax.Array,
     k_lin = cache.k_pool[:, table].reshape((L, MB * bs) + kv_shape)
     v_lin = cache.v_pool[:, table].reshape((L, MB * bs) + kv_shape)
     cap = view_k.shape[2]
-    return (view_k.at[:, row, :].set(k_lin[:, :cap]),
-            view_v.at[:, row, :].set(v_lin[:, :cap]))
+    live = (jnp.arange(cap) < cache.seq_lens[seq_id])[:, None, None]
+    k_row = jnp.where(live, k_lin[:, :cap], 0)
+    v_row = jnp.where(live, v_lin[:, :cap], 0)
+    return (view_k.at[:, row, :].set(k_row),
+            view_v.at[:, row, :].set(v_row))
 
 
 @jax.jit
@@ -91,6 +106,19 @@ def slice_context(view_k: jax.Array, view_v: jax.Array, rows: jax.Array):
     Returns (L, B, KV, S, hd) (attention-native layout)."""
     return (view_k[:, rows].transpose(0, 1, 3, 2, 4),
             view_v[:, rows].transpose(0, 1, 3, 2, 4))
+
+
+@jax.jit
+def stacked_context(stack_k: jax.Array, stack_v: jax.Array,
+                    sid: jax.Array, rows: jax.Array):
+    """:func:`slice_context` lifted to the stacked primary
+    ``(N, L, rows, S_cap, KV, hd)``: one fused two-axis gather in input
+    order, serving single- and cross-shard batches identically.
+    Returns (L, B, KV, S, hd)."""
+    k = stack_k[sid, :, rows]               # (B, L, S_cap, KV, hd)
+    v = stack_v[sid, :, rows]
+    return (jnp.transpose(k, (1, 0, 3, 2, 4)),
+            jnp.transpose(v, (1, 0, 3, 2, 4)))
 
 
 # -- host orchestration ----------------------------------------------------------
@@ -124,20 +152,23 @@ class ShortcutKVManager:
         self.cache = cache
         self.num_shards = num_shards
         self.seqs_per_shard = -(-max_seqs // num_shards)
-        # One (view_k, view_v) pair per shard; sharing the initial zero
-        # arrays across slots is safe — replays are functional (`.at[]`)
-        # and publication swaps whole tuples.
-        self.views = ShardViewRegistry(num_shards)
+        # The stacked (N, L, rows, S_cap, KV, hd) view pair is the
+        # PRIMARY storage (family "kv_view", DESIGN.md §4.4): replay
+        # threads publish their shard's slice straight into it at
+        # publish time, readers take the whole stack (cross-shard
+        # get_context) or a memoized slice of it (per-shard snapshot /
+        # replay read-modify-write) — no per-shard duplicates exist.
+        self.operands = StackedOperandCache(num_shards)
+        self.views = ShardViewRegistry(num_shards, cache=self.operands,
+                                       family="kv_view")
         zk = jnp.zeros((L, self.seqs_per_shard, seq_capacity, KV, hd),
                        cache.k_pool.dtype)
         zv = jnp.zeros_like(zk)
-        for s in range(num_shards):
-            self.views.publish(s, (zk, zv))
-        # device-resident stacked (N, L, rows, S_cap, KV, hd) view pair
-        # for cross-shard reads, refreshed per dirty shard (keyed by the
-        # registry's publish epochs) — get_context stopped re-stacking
-        # per-shard gathers on every batch
-        self.operands = StackedOperandCache(num_shards)
+        # seed every shard published-at-zero: the all-zero view is a
+        # valid (empty) publication, so first replays take the update
+        # path exactly as before
+        self.operands.seed("kv_view", [(zk, zv)] * num_shards)
+        self._view_shape = tuple(zk.shape)
         self.group = MapperGroup(
             [ShortcutMapper(
                 replay_create=lambda snap, reqs, shard=i:
@@ -283,10 +314,10 @@ class ShortcutKVManager:
         seq_ids = np.asarray(seq_ids)
         if seq_ids.size == 0:
             # empty batch: no fragmentation statistic, no gather, no
-            # route counters — nothing may touch the device
-            vk, _ = self.views.snapshot(0)
-            L, _, S, KV, hd = vk.shape
-            empty = jnp.zeros((L, 0, KV, S, hd), vk.dtype)
+            # route counters, no operand-cache traffic — nothing may
+            # touch the views (shapes come from the recorded extent)
+            L, _, S, KV, hd = self._view_shape
+            empty = jnp.zeros((L, 0, KV, S, hd), self.cache.k_pool.dtype)
             return empty, empty, route or "paged"
         route = route or self.route(seq_ids)
         # batch-level decision -> group-level counter (a multi-shard
@@ -299,36 +330,22 @@ class ShortcutKVManager:
         return k, v, route
 
     def _shortcut_context(self, seq_ids: np.ndarray):
-        """Cross-shard view read in input order (no locks: one registry
-        snapshot per shard is consistent by construction).
+        """View read in input order, straight off the stacked primary.
 
-        A single-shard batch gathers straight off that shard's tuple; a
-        multi-shard batch reads the cached device-resident stacked pair
-        ``(N, L, rows, S_cap, KV, hd)`` with one fused two-axis gather
-        ``stack[sid, :, row]`` — input order falls out of the index
-        arrays, so the old argsort/pad/per-shard-gather/scatter-back
-        pass (and its per-call ``jnp.stack`` of gathered slabs) is gone.
-        Epochs are read BEFORE the snapshots (operand-cache protocol):
-        a publish racing in between can only make the cache refresh
-        redundantly, never serve a slice older than the route gate
-        certified."""
+        One fused two-axis gather ``stack[sid, :, row]`` serves single-
+        and multi-shard batches alike — input order falls out of the
+        index arrays, and the stack needs no per-call refresh: replays
+        published their slices into it BEFORE bumping ``view_epoch`` and
+        ``sc_version``, so ``get`` here is an epoch check plus a handle
+        return (a stack older than what the route gate certified cannot
+        be served; a publish racing this read only makes the stack
+        newer).  Epochs are read before the handle, per the protocol."""
+        epochs = [m.view_epoch for m in self.group]
+        stack_k, stack_v = self.operands.get("kv_view", epochs)
         sid = seq_ids % self.num_shards
         rows = seq_ids // self.num_shards
-        involved = np.unique(sid)
-        if involved.size <= 1:
-            shard = int(involved[0]) if involved.size else 0
-            k, v = self.views.snapshot(shard)
-            return slice_context(k, v, jnp.asarray(rows))
-        epochs = self.views.epochs()
-        views = self.views.snapshot_all()
-        stack_k, stack_v = self.operands.get(
-            "kv_view", epochs, lambda s: views[s])
-        si = jnp.asarray(sid)
-        ri = jnp.asarray(rows)
-        k = stack_k[si, :, ri]              # (B, L, S_cap, KV, hd)
-        v = stack_v[si, :, ri]
-        return (jnp.transpose(k, (1, 0, 3, 2, 4)),
-                jnp.transpose(v, (1, 0, 3, 2, 4)))
+        return stacked_context(stack_k, stack_v, jnp.asarray(sid),
+                               jnp.asarray(rows))
 
     def seq_lens(self, seq_ids: np.ndarray) -> np.ndarray:
         return np.asarray(self.cache.seq_lens)[seq_ids]
@@ -347,10 +364,12 @@ class ShortcutKVManager:
     # -- replay callables (the only KV-specific maintenance code) ------------
     #
     # Lock-free: each replay runs on its shard's single mapper (thread or
-    # pump caller), mutates only arrays reachable from its own registry
-    # slot, and publishes once per run as one atomic tuple swap.  No
-    # other shard's state is read or written — concurrent shard replays
-    # never serialize on anything.
+    # pump caller), reads its shard's memoized slice of the stacked
+    # primary, chains the functional updates, and publishes ONE slice
+    # write back into the stack — at the mapper's next_view_epoch,
+    # before sc_version moves (zero-copy publish, DESIGN.md §4.4).  No
+    # other shard's slice is read or written — concurrent shard replays
+    # never serialize on anything but the cache's brief patch lock.
 
     def _replay_create(self, cache: pc.PagedKVCache, requests,
                        shard: int = 0) -> None:
@@ -361,7 +380,8 @@ class ShortcutKVManager:
                     cache, vk, vv, jnp.int32(int(s)),
                     jnp.int32(int(s) // self.num_shards))
             self.group[shard].stats.slots_remapped += len(r.versions)
-        self.views.publish(shard, (vk, vv))
+        self.views.publish(shard, (vk, vv),
+                           epoch=self.group[shard].next_view_epoch)
 
     def _replay_update(self, cache: pc.PagedKVCache, requests,
                        shard: int = 0) -> None:
@@ -373,7 +393,8 @@ class ShortcutKVManager:
                 vk, vv, jnp.asarray(rows),
                 jnp.asarray(positions), new_k, new_v)
             self.group[shard].stats.slots_remapped += len(r.versions)
-        self.views.publish(shard, (vk, vv))
+        self.views.publish(shard, (vk, vv),
+                           epoch=self.group[shard].next_view_epoch)
 
     def __enter__(self):
         return self

@@ -173,9 +173,11 @@ class ShortcutMapper:
         # (runtime/operand_cache.py): trad_epoch moves with every
         # authoritative mutation (record/invalidate), view_epoch with
         # every replay-batch publication.  Writer order is always
-        # "store arrays, then bump" — and view_epoch bumps BEFORE
+        # "publish operands, then bump" — replay callables push their
+        # results into the stacked cache at :attr:`next_view_epoch`
+        # while the replay runs, view_epoch catches up to it before
         # sc_version publication, so any view a version gate certifies
-        # is already visible as a dirty epoch to cache readers.
+        # is already resident in the stack at a covering epoch.
         self.trad_epoch = 0
         self.view_epoch = 0
         self._trad: dict = {}
@@ -213,6 +215,18 @@ class ShortcutMapper:
             self._trad[k] = self._trad.get(k, 0) + 1
             self._sc[k] = -1
         self.trad_epoch += 1
+
+    @property
+    def next_view_epoch(self) -> int:
+        """The epoch the in-flight replay's publications carry.
+
+        Meaningful only on the replay path (mapper thread or ``pump()``
+        caller, under ``_replay_mutex``): replay callables publish their
+        operands into the stacked cache at this epoch, and ``_process``
+        bumps ``view_epoch`` to exactly it before publishing
+        ``sc_version`` — so a reader whose gate certified the new
+        version finds the cache entry already at a covering epoch."""
+        return self.view_epoch + 1
 
     def trad_version(self, key: Hashable = GLOBAL_VIEW) -> int:
         return self._trad.get(key, 0)
@@ -337,9 +351,13 @@ class ShortcutMapper:
            authoritative structure, which already contains their effect;
         2. replay survivors in FIFO order, handing the client contiguous
            runs of same-kind requests (so e.g. EH merges one update batch
-           and the KV cache composes creates before later appends);
+           and the KV cache composes creates before later appends) —
+           replay callables publish their operands straight into the
+           stacked cache at :attr:`next_view_epoch` (zero-copy publish;
+           the lookup path never patches);
         3. eagerly populate the view arrays (§3.1);
-        4. publish ``sc_version`` monotonically.
+        4. bump ``view_epoch`` to the epoch the replays published at,
+           then publish ``sc_version`` monotonically.
         """
         with self.lock:
             snap = self._snapshot()
@@ -377,10 +395,11 @@ class ShortcutMapper:
         self.stats.replay_seconds += t1 - t0
         self.stats.populate_seconds += t2 - t1
 
-        # bump BEFORE publishing sc versions: once a gate certifies
-        # these versions, operand-cache readers must already see the
-        # epoch move (else a cached slice older than the certified view
-        # would read as clean and be served)
+        # catch up to next_view_epoch (what the replays published at)
+        # BEFORE publishing sc versions: once a gate certifies these
+        # versions, the stacked cache already holds the published
+        # operands at a covering epoch — a reader can never be handed
+        # a stack older than the view the gate certified
         self.view_epoch += 1
 
         for r in batch:

@@ -1,9 +1,11 @@
-"""Device-resident operand cache (runtime/operand_cache) and per-shard
-routed fused lookup: epoch/refresh/rebuild semantics, routed-kernel
-parity for ``two_level`` vectors in {all-true, all-false, mixed}, the
-empty-batch short-circuits, and cache coherence under concurrent async
-replays (no torn stacks; a slice older than the epoch the gate certified
-is never served)."""
+"""Publish-owned operand cache (runtime/operand_cache) and per-shard
+routed fused lookup: publish/touch/seed semantics and the writer-order
+contract, pull-mode epoch/refresh/rebuild semantics, grow-past-extent
+re-stacks with live readers, routed-kernel parity for ``two_level``
+vectors in {all-true, all-false, mixed}, the empty-batch
+short-circuits, and cache coherence under concurrent async replays (no
+torn stacks; a slice older than the epoch the gate certified is never
+served; steady-state lookups patch zero slices)."""
 import threading
 
 import jax.numpy as jnp
@@ -131,6 +133,196 @@ class TestCacheUnit:
 
 
 # ---------------------------------------------------------------------------
+# The publish path: writers patch the stack at publish time; the lookup
+# path is an epoch check plus a handle return.
+# ---------------------------------------------------------------------------
+
+class TestPublishPath:
+    def test_first_publish_creates_family_zeroed(self):
+        cache = StackedOperandCache(3)
+        cache.publish("v", 1, (jnp.full((4,), 7, jnp.int32),), epoch=5)
+        assert cache.published("v") == [False, True, False]
+        assert cache.epochs("v") == [0, 5, 0]
+        stack, = cache.handle("v")
+        np.testing.assert_array_equal(
+            np.asarray(stack), [[0] * 4, [7] * 4, [0] * 4])
+        assert cache.stats.publish_refreshes == 1
+        assert cache.stats.rebuilds == 1          # the zeroed creation
+        assert cache.resident_bytes()["v"] == stack.nbytes
+
+    def test_get_without_parts_is_epoch_check_plus_handle(self):
+        cache = StackedOperandCache(2)
+        cache.publish("v", 0, (jnp.ones((2,), jnp.int32),), epoch=3)
+        cache.publish("v", 1, (jnp.full((2,), 2, jnp.int32),), epoch=1)
+        out = cache.get("v", [3, 1])
+        assert out is cache.handle("v")           # the stack itself
+        assert cache.stats.hits == 1
+        assert cache.stats.lookup_refreshes == 0
+        # a newer entry than requested is still a hit (allowed race
+        # direction: publish landed between epoch read and get)
+        assert cache.get("v", [2, 0]) is out
+
+    def test_lagging_push_family_is_writer_order_violation(self):
+        cache = StackedOperandCache(2)
+        with pytest.raises(RuntimeError, match="never published"):
+            cache.get("v", [0, 0])
+        cache.publish("v", 0, (jnp.zeros((2,), jnp.int32),), epoch=1)
+        with pytest.raises(RuntimeError, match="lags the reader"):
+            cache.get("v", [1, 2])
+
+    def test_touch_advances_epoch_without_data(self):
+        cache = StackedOperandCache(2)
+        cache.touch("v", 0, epoch=9)              # no family yet: no-op
+        assert "v" not in cache
+        cache.publish("v", 0, (jnp.ones((2,), jnp.int32),), epoch=1)
+        before = cache.handle("v")
+        cache.touch("v", 0, epoch=4)
+        assert cache.epochs("v") == [4, 0]
+        assert cache.handle("v") is before        # no device work
+        cache.touch("v", 0, epoch=2)              # epochs only move forward
+        assert cache.epochs("v") == [4, 0]
+
+    def test_seed_publishes_every_shard(self):
+        cache = StackedOperandCache(2)
+        z = jnp.zeros((3, 2), jnp.float32)
+        cache.seed("kv", [(z, z), (z, z)])
+        assert cache.published("kv") == [True, True]
+        assert cache.epochs("kv") == [0, 0]
+        k, v = cache.get("kv", [0, 0])
+        assert k.shape == (2, 3, 2) and v.shape == (2, 3, 2)
+
+    def test_publish_validates_part_count_dtype_rank(self):
+        cache = StackedOperandCache(2)
+        cache.publish("v", 0, (jnp.zeros((2,), jnp.int32),), epoch=1)
+        with pytest.raises(ValueError, match="parts for"):
+            cache.publish("v", 0, (jnp.zeros((2,), jnp.int32),) * 2,
+                          epoch=2)
+        with pytest.raises(ValueError, match="dtypes changed"):
+            cache.publish("v", 0, (jnp.zeros((2,), jnp.float32),), epoch=2)
+        with pytest.raises(ValueError, match="ranks changed"):
+            cache.publish("v", 0, (jnp.zeros((2, 2), jnp.int32),), epoch=2)
+        with pytest.raises(ValueError, match="shard"):
+            cache.publish("v", 2, (jnp.zeros((2,), jnp.int32),), epoch=2)
+
+    def test_smaller_part_pads_to_extent(self):
+        cache = StackedOperandCache(2)
+        cache.publish("v", 0, (jnp.full((4,), 1, jnp.int32),), epoch=1)
+        cache.publish("v", 1, (jnp.full((2,), 2, jnp.int32),), epoch=1)
+        stack, = cache.get("v", [1, 1])
+        np.testing.assert_array_equal(
+            np.asarray(stack), [[1, 1, 1, 1], [2, 2, 0, 0]])
+
+    def test_grow_past_extent_restacks_without_blocking_readers(self):
+        """A part outgrowing the stacked extent embeds the old stack in
+        a larger zeroed one and swaps atomically: the reader's old
+        handle stays valid and bit-identical, the new stack carries the
+        old slices at the origin plus the grown part."""
+        cache = StackedOperandCache(2)
+        cache.publish("v", 0, (jnp.full((2, 2), 3, jnp.int32),), epoch=1)
+        cache.publish("v", 1, (jnp.full((2, 2), 4, jnp.int32),), epoch=1)
+        old, = cache.get("v", [1, 1])
+        old_copy = np.asarray(old).copy()
+        built = cache.stats.rebuilds
+        # shard 0 doubles its first axis (a directory doubling)
+        cache.publish("v", 0, (jnp.full((4, 2), 5, jnp.int32),), epoch=2)
+        assert cache.stats.rebuilds == built + 1
+        np.testing.assert_array_equal(np.asarray(old), old_copy)
+        new, = cache.get("v", [2, 1])
+        assert new.shape == (2, 4, 2)
+        np.testing.assert_array_equal(np.asarray(new[0]), 5)
+        # shard 1 kept its data, zero-padded past its own extent
+        np.testing.assert_array_equal(np.asarray(new[1][:2]), 4)
+        np.testing.assert_array_equal(np.asarray(new[1][2:]), 0)
+        assert cache.resident_bytes()["v"] == new.nbytes
+
+    def test_slice_of_memoized_per_publish(self):
+        cache = StackedOperandCache(2)
+        assert cache.slice_of("v", 0) is None
+        cache.publish("v", 0, (jnp.full((3,), 1, jnp.int32),), epoch=1)
+        s1 = cache.slice_of("v", 0)
+        assert cache.slice_of("v", 0) is s1       # steady state: memo hit
+        np.testing.assert_array_equal(np.asarray(s1[0]), 1)
+        cache.publish("v", 1, (jnp.full((3,), 2, jnp.int32),), epoch=1)
+        s2 = cache.slice_of("v", 0)
+        assert s2 is not s1                       # stack swapped: new slice
+        np.testing.assert_array_equal(np.asarray(s2[0]), 1)
+        np.testing.assert_array_equal(
+            np.asarray(cache.slice_of("v", 1)[0]), 2)
+
+    def test_publish_if_present_only_warms_existing(self):
+        cache = StackedOperandCache(2)
+        calls = []
+
+        def parts():
+            calls.append(1)
+            return (jnp.zeros((2,), jnp.int32),)
+
+        cache.publish_if_present("t", 0, parts, epoch=1)
+        assert calls == [] and "t" not in cache   # never built: no cost
+        cache.get("t", [0, 0],
+                  lambda s: (jnp.full((2,), s, jnp.int32),))
+        cache.publish_if_present("t", 0, parts, epoch=1)
+        assert calls == [1] and cache.epochs("t") == [1, 0]
+
+    def test_invalidate_resets_published_flags_and_resident(self):
+        cache = StackedOperandCache(2)
+        cache.publish("v", 0, (jnp.zeros((2,), jnp.int32),), epoch=1)
+        cache.invalidate("v")
+        assert cache.published("v") is None
+        assert "v" not in cache.resident_bytes()
+        assert cache.slice_of("v", 0) is None
+
+    def test_concurrent_readers_during_publish_churn(self):
+        """One writer thread publishes growing slices while readers spin
+        on slice_of/get: every observed slice must be internally
+        consistent (keys and vals from the SAME publication) and the
+        epoch contract must hold — get at an epoch the writer already
+        stored never raises and never serves older data."""
+        cache = StackedOperandCache(2)
+        cache.publish("v", 0, (jnp.zeros((4,), jnp.int32),
+                               jnp.zeros((4,), jnp.int32)), epoch=0)
+        cache.publish("v", 1, (jnp.zeros((4,), jnp.int32),
+                               jnp.zeros((4,), jnp.int32)), epoch=0)
+        published = [0, 0]                        # writer-side epochs
+        errors = []
+        stop = threading.Event()
+
+        def reader():
+            try:
+                while not stop.is_set():
+                    eps = list(published)         # epochs BEFORE get
+                    k, v = cache.get("v", eps)
+                    for s in range(2):
+                        a, b = np.asarray(k[s]), np.asarray(v[s])
+                        assert np.array_equal(b, -a), "torn slice"
+                        # each publication's first element IS its epoch
+                        assert a[0] >= eps[s], \
+                            "stale slice served past its epoch"
+                    sl = cache.slice_of("v", 0)
+                    assert np.array_equal(np.asarray(sl[1]),
+                                          -np.asarray(sl[0]))
+            except Exception as e:                # pragma: no cover
+                errors.append(e)
+
+        threads = [threading.Thread(target=reader) for _ in range(2)]
+        for t in threads:
+            t.start()
+        try:
+            for e in range(1, 40):
+                s = e % 2
+                n = 4 + (e // 8) * 2              # periodic growth
+                a = jnp.arange(e, e + n, dtype=jnp.int32)
+                cache.publish("v", s, (a, -a), epoch=e)
+                published[s] = e                  # arrays before epochs
+        finally:
+            stop.set()
+            for t in threads:
+                t.join(timeout=60.0)
+        assert not errors, errors
+        assert cache.stats.lookup_refreshes == 0  # readers never patched
+
+
+# ---------------------------------------------------------------------------
 # Routed kernel parity: per-shard two_level in {all-true, all-false, mixed}.
 # ---------------------------------------------------------------------------
 
@@ -184,6 +376,23 @@ class TestRoutedKernelParity:
             jnp.asarray(flags, jnp.int32), tile=64)
         np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
 
+    def test_stacked_single_shard_select_matches_flat(self, rng):
+        """The bound single-shard path (``stacked_shortcut_lookup``):
+        scalar-prefetched shard id selects one slice of the stacked
+        views inside the kernel — parity with the flat per-shard
+        shortcut lookup, including misses, for every shard."""
+        o = _stacked_shards(rng, 4)
+        for s in range(4):
+            keys = jnp.concatenate([
+                o["keys"][s],
+                jnp.asarray(unique_keys(rng, 40, lo=2**31, hi=2**32 - 2),
+                            jnp.uint32)])
+            ref = eh.shortcut_lookup_many(
+                o["vks"][s], o["vvs"][s], int(o["vls"][s]), keys)
+            got = kmod.stacked_shortcut_lookup(
+                keys, o["vks"], o["vvs"], o["vls"], s, tile=64)
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
     def test_slot_width_mismatch_rejected(self, rng):
         o = _stacked_shards(rng, 2)
         with pytest.raises(ValueError, match="slot widths"):
@@ -224,14 +433,19 @@ class TestCachedShardedLookup:
             np.testing.assert_array_equal(
                 np.asarray(idx.lookup_batched(keys)), vals)
             built = idx.operands.stats.rebuilds
-            for _ in range(3):          # unchanged index: zero uploads
+            pubs = idx.operands.stats.publish_refreshes
+            for _ in range(3):          # unchanged index: zero device work
                 np.testing.assert_array_equal(
                     np.asarray(idx.lookup_batched(keys)), vals)
             assert idx.operands.stats.hits >= 3
             assert idx.operands.stats.rebuilds == built
-            assert idx.operands.stats.slice_refreshes == 0
+            assert idx.operands.stats.publish_refreshes == pubs
+            # THE acceptance invariant: refreshes moved off the lookup
+            # path entirely — replays published at write time instead
+            assert idx.operands.stats.lookup_refreshes == 0
+            assert pubs > 0
 
-    def test_refresh_is_per_dirty_shard(self, rng):
+    def test_refresh_happens_at_publish_not_lookup(self, rng):
         keys = unique_keys(rng, 600)
         vals = np.arange(600, dtype=np.uint32)
         with ShardedShortcutEH(12, 8, 2048, num_shards=4) as idx:
@@ -242,17 +456,16 @@ class TestCachedShardedLookup:
             # the owning shard's mapper and state)
             target = unique_keys(rng, 1, lo=2**31, hi=2**32 - 2)
             idx.insert(target, np.asarray([999_999], np.uint32))
-            idx.pump()
-            before = idx.operands.stats.slice_refreshes
+            pubs = idx.operands.stats.publish_refreshes
+            idx.pump()                                # replay publishes HERE
+            assert idx.operands.stats.publish_refreshes > pubs
             out = np.asarray(idx.lookup_batched(
                 np.concatenate([keys, target])))
             np.testing.assert_array_equal(out[:-1], vals)
             assert out[-1] == 999_999
-            # one dirty shard: at most one slice per consulted family
-            # (a mixed-routed batch touches both families) — never a
-            # per-shard restack of the whole index
-            refreshed = idx.operands.stats.slice_refreshes - before
-            assert refreshed <= 2
+            # the lookup itself patched nothing: the slice landed on the
+            # mapper thread at publish time, before sc_version moved
+            assert idx.operands.stats.lookup_refreshes == 0
 
     def test_gate_certified_view_never_stale(self, rng):
         """Insert → pump → lookup must see the new key through the
@@ -307,13 +520,16 @@ class TestCachedShardedLookup:
             idx.pump()
             counts = _count_kernels(monkeypatch)
             routed = (idx.routed_shortcut, idx.routed_traditional)
+            stats = idx.operands.stats.snapshot()
             out = idx.lookup_batched(np.empty(0, np.uint32))
             assert out.shape == (0,) and out.dtype == jnp.uint32
             out = idx.lookup(np.empty(0, np.uint32))
             assert out.shape == (0,)
             assert sum(counts.values()) == 0          # no dispatch at all
             assert (idx.routed_shortcut, idx.routed_traditional) == routed
-            assert idx.operands.stats.rebuilds == 0   # cache untouched
+            after = idx.operands.stats                # cache untouched
+            assert (after.hits, after.rebuilds, after.slice_refreshes) == \
+                (stats.hits, stats.rebuilds, stats.slice_refreshes)
 
 
 class TestKVEmptyBatch:
